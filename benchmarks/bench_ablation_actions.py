@@ -1,0 +1,31 @@
+"""Paper §VII-D4: action-space ablation — default (cbo+lead+noop) vs
++broadcast (instability), +swap, -lead (no join-order power), -cbo (no
+escape from the syntactic plan family)."""
+import json
+
+from benchmarks.common import AQORA, csv_line
+
+
+def main():
+    p = AQORA / "ablations.json"
+    if not p.exists():
+        print("bench_ablation_actions: missing results")
+        return False
+    d = json.loads(p.read_text())
+    print("\n== §VII-D4: action-space subsets (ExtJOB) ==")
+    for key, label in (("rl_ppo", "default: {cbo, lead, noop}"),
+                       ("act_plus_broadcast", "+ broadcast hints"),
+                       ("act_plus_swap", "+ swap"),
+                       ("act_no_lead", "- lead"),
+                       ("act_no_cbo", "- cbo")):
+        if key not in d:
+            continue
+        r = d[key]
+        print(f"{label:30s} test C={r['total']:8.1f}s exec={r['exec']:8.1f}s "
+              f"fails={r['fails']}")
+        csv_line(f"actions_{key}", 0, f"{r['total']:.1f}")
+    return True
+
+
+if __name__ == "__main__":
+    main()

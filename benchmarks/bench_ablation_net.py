@@ -1,0 +1,39 @@
+"""Paper Fig. 11(b) + Tab. III: encoder architectures — parameters,
+optimization overhead (mean per-query plan time at evaluation), final cost."""
+import json
+
+from benchmarks.common import AQORA, csv_line
+
+
+def _params(net: str) -> int:
+    from repro.core.agent import AgentConfig, AqoraAgent
+    from repro.core.encoding import WorkloadMeta
+    meta = WorkloadMeta(table_index={f"t{i}": i for i in range(21)},
+                        n_tables_max=17)
+    return AqoraAgent(meta, AgentConfig(net=net), seed=0).param_count()
+
+
+def main():
+    p = AQORA / "ablations.json"
+    if not p.exists():
+        print("bench_ablation_net: missing results")
+        return False
+    d = json.loads(p.read_text())
+    print("\n== Fig. 11(b)/Tab. III: decision-model architectures (ExtJOB) ==")
+    print(f"{'model':12s} {'params':>9s} {'opt overhead/query':>19s} "
+          f"{'test C (s)':>11s} {'fails':>5s}")
+    for net, key in (("treecnn", "rl_ppo"), ("lstm", "net_lstm"),
+                     ("fcnn", "net_fcnn"), ("queryformer", "net_queryformer")):
+        if key not in d:
+            continue
+        r = d[key]
+        n = len(r["per_query"])
+        ovh = r["plan"] / max(n, 1)
+        print(f"{net:12s} {_params(net):9d} {ovh * 1000:16.0f} ms "
+              f"{r['total']:11.1f} {r['fails']:5d}")
+        csv_line(f"tab3_{net}_overhead_ms", f"{ovh * 1e6:.0f}", f"{r['total']:.1f}")
+    return True
+
+
+if __name__ == "__main__":
+    main()

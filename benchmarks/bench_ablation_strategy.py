@@ -1,0 +1,29 @@
+"""Paper Fig. 11(c): learning-strategy ablation — default (curriculum +
+3-step limit) vs no-step-limit vs no-curriculum."""
+import json
+
+from benchmarks.common import AQORA, csv_line
+
+
+def main():
+    p = AQORA / "ablations.json"
+    if not p.exists():
+        print("bench_ablation_strategy: missing results")
+        return False
+    d = json.loads(p.read_text())
+    print("\n== Fig. 11(c): learning strategies (ExtJOB) ==")
+    for key, label in (("rl_ppo", "default (curriculum + step limit 3)"),
+                       ("strat_no_step_limit", "no step limit (8 steps)"),
+                       ("strat_no_curriculum", "no curriculum (full space)")):
+        if key not in d:
+            continue
+        r = d[key]
+        fails_curve = r.get("train_fail_curve", [])
+        print(f"{label:38s} test C={r['total']:8.1f}s fails={r['fails']} "
+              f"train-failure curve: {fails_curve[:10]}")
+        csv_line(f"fig11c_{key}", 0, f"{r['total']:.1f}")
+    return True
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Paper Fig. 3: CBO optimization time vs execution time as join count
+grows (the DP blowup that motivates adaptive re-optimization)."""
+import json
+
+from benchmarks.common import AQORA, csv_line
+
+
+def main():
+    p = AQORA / "ablations.json"
+    if not p.exists() or "cbo_cost" not in json.loads(p.read_text()):
+        print("bench_cbo_cost: missing results")
+        return False
+    rows = json.loads(p.read_text())["cbo_cost"]
+    print("\n== Fig. 3: CBO planning vs execution time by join count ==")
+    print(f"{'relations':>9s} {'C_plan (s)':>11s} {'exec no-CBO':>12s} "
+          f"{'exec CBO':>9s}")
+    by_n = {}
+    for r in rows:
+        by_n.setdefault(r["n"], []).append(r)
+    for n in sorted(by_n):
+        g = by_n[n]
+        tp = sum(r["plan_time"] for r in g) / len(g)
+        e0 = sum(r["exec_no_cbo"] for r in g) / len(g)
+        e1 = sum(r["exec_cbo"] for r in g) / len(g)
+        print(f"{n:9d} {tp:11.3f} {e0:12.1f} {e1:9.1f}")
+    big = max(by_n)
+    small = min(by_n)
+    ratio = (sum(r['plan_time'] for r in by_n[big]) /
+             max(sum(r['plan_time'] for r in by_n[small]), 1e-9))
+    csv_line("fig3_plan_time_blowup", 0, f"{ratio:.0f}x")
+    return True
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: wall time of the jnp reference paths on CPU
+(the Pallas kernels execute only under interpret=True here, which measures
+Python emulation, not TPU perf — the roofline table is the TPU-side
+evidence; these numbers track the *reference* implementations)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main():
+    from repro.kernels.ref import flash_attention_ref, mamba_scan_ref
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((8, 512, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((8, 512, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((8, 512, 64)), jnp.float32)
+    fa = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v))
+    us = _time(fa, q, k, v)
+    print(f"\n== kernel reference microbenchmarks (CPU) ==")
+    print(f"attention_ref 8x512x64:   {us:10.0f} us/call")
+    csv_line("attention_ref_8x512x64", f"{us:.0f}", "oracle")
+
+    x = jnp.asarray(rng.standard_normal((2, 256, 64)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((2, 256, 64))) * 0.1, jnp.float32)
+    A = jnp.asarray(-np.abs(rng.standard_normal((64, 16))), jnp.float32)
+    Bs = jnp.asarray(rng.standard_normal((2, 256, 16)), jnp.float32)
+    Cs = jnp.asarray(rng.standard_normal((2, 256, 16)), jnp.float32)
+    ms = jax.jit(lambda *a: mamba_scan_ref(*a)[0])
+    us = _time(ms, x, dt, A, Bs, Cs)
+    print(f"mamba_scan_ref 2x256x64:  {us:10.0f} us/call")
+    csv_line("mamba_scan_ref_2x256x64", f"{us:.0f}", "oracle")
+
+    # TreeCNN inference latency (the per-stage decision cost, Tab. III)
+    from repro.core.agent import AgentConfig, AqoraAgent
+    from repro.core.encoding import MAX_NODES, WorkloadMeta
+    meta = WorkloadMeta(table_index={f"t{i}": i for i in range(21)},
+                        n_tables_max=17)
+    agent = AqoraAgent(meta, AgentConfig(), seed=0)
+    feat = np.zeros((MAX_NODES, meta.feat_dim), np.float32)
+    li = np.zeros(MAX_NODES, np.int32)
+    ri = np.zeros(MAX_NODES, np.int32)
+    mask = np.ones(MAX_NODES, np.float32)
+    t0 = time.perf_counter()
+    for _ in range(20):
+        agent.policy_probs((feat, li, ri, mask), np.ones(agent.space.d, np.float32))
+    us = (time.perf_counter() - t0) / 20 * 1e6
+    print(f"treecnn policy inference: {us:10.0f} us/call "
+          f"(paper Tab. III: 317 ms/query incl. engine round-trips)")
+    csv_line("treecnn_policy_inference", f"{us:.0f}", "per-stage decision")
+    return True
+
+
+if __name__ == "__main__":
+    main()

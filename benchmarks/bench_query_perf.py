@@ -1,0 +1,66 @@
+"""Paper Fig. 7 (end-to-end / optimization / raw execution time per method
+per benchmark), Fig. 10 (top-10 improved queries), §VII-C3 (bushy-plan
+proportion)."""
+from benchmarks.common import METHODS, csv_line, load, totals
+
+
+def fig7():
+    print("\n== Fig. 7: query performance on three benchmarks (seconds) ==")
+    print(f"{'bench':8s} {'method':10s} {'C (e2e)':>10s} {'C_exec':>10s} "
+          f"{'C_plan':>9s} {'fails':>5s}")
+    ok = False
+    for bench in ("job", "extjob", "stack"):
+        d = load(bench)
+        if d is None:
+            print(f"{bench:8s} -- missing (run repro.experiments.main_experiment)")
+            continue
+        ok = True
+        base = totals(d["spark"])["total"]
+        for m in METHODS:
+            t = totals(d[m])
+            print(f"{bench:8s} {m:10s} {t['total']:10.1f} {t['exec']:10.1f} "
+                  f"{t['plan']:9.1f} {t['fails']:5d}"
+                  + (f"   ({(base - t['total']) / base:+.1%} vs spark)"
+                     if m != "spark" else ""))
+        aq = totals(d["aqora"])["total"]
+        csv_line(f"fig7_{bench}_aqora_vs_spark", 0, f"{(base - aq) / base:.3f}")
+    return ok
+
+
+def fig10_top10():
+    print("\n== Fig. 10: top-10 queries improved by AQORA vs Spark default ==")
+    for bench in ("job", "extjob", "stack"):
+        d = load(bench)
+        if d is None:
+            continue
+        sp = {r["query"]: r["total"] for r in d["spark"]}
+        aq = {r["query"]: r["total"] for r in d["aqora"]}
+        imp = sorted(((sp[q] - aq[q]) / sp[q], q) for q in sp)[::-1][:10]
+        tops = ", ".join(f"{q.split('/')[-1]}:{d_:.0%}" for d_, q in imp)
+        print(f"{bench:8s} {tops}")
+        csv_line(f"fig10_{bench}_best_improvement", 0, f"{imp[0][0]:.3f}")
+
+
+def bushy_proportion():
+    print("\n== §VII-C3: proportion of test queries executed as bushy plans ==")
+    for bench in ("job", "extjob", "stack"):
+        d = load(bench)
+        if d is None:
+            continue
+        n = len(d["aqora"])
+        b = sum(r.get("bushy", False) for r in d["aqora"])
+        print(f"{bench:8s} {b}/{n} ({b / n:.1%}) bushy under AQORA "
+              f"(spark default: {sum(r.get('bushy', 0) for r in d['spark'])})")
+        csv_line(f"bushy_{bench}", 0, f"{b / n:.3f}")
+
+
+def main():
+    ok = fig7()
+    if ok:
+        fig10_top10()
+        bushy_proportion()
+    return ok
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Shared helpers for the benchmark suite: result loading + formatting."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+AQORA = ROOT / "results" / "aqora"
+DRYRUN = ROOT / "results" / "dryrun"
+PERF = ROOT / "results" / "perf"
+
+METHODS = ("spark", "lero", "autosteer", "aqora")
+
+
+def load(name: str):
+    p = AQORA / f"{name}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def totals(rows):
+    return {"total": sum(r["total"] for r in rows),
+            "exec": sum(r["latency"] for r in rows),
+            "plan": sum(r["plan_time"] for r in rows),
+            "fails": sum(r["failed"] for r in rows)}
+
+
+def pct(rows, q):
+    import numpy as np
+    xs = sorted(r["total"] for r in rows)
+    return float(np.percentile(xs, q))
+
+
+def csv_line(name, us_per_call, derived):
+    print(f"CSV,{name},{us_per_call},{derived}")

@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure + the assignment's
+roofline table. Each prints a readable table plus CSV lines
+``CSV,name,us_per_call,derived``. Missing result files are reported with
+the command that produces them (experiments run separately because they
+train RL agents for minutes).
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_ablation_actions, bench_ablation_net,
+                            bench_ablation_rl, bench_ablation_strategy,
+                            bench_cbo_cost, bench_delta_table, bench_dynamic,
+                            bench_kernels, bench_query_perf, bench_roofline,
+                            bench_tails)
+    ran, missing = [], []
+    for mod in (bench_query_perf, bench_delta_table, bench_tails,
+                bench_dynamic, bench_ablation_rl, bench_ablation_net,
+                bench_ablation_strategy, bench_ablation_actions,
+                bench_cbo_cost, bench_roofline, bench_kernels):
+        name = mod.__name__.split(".")[-1]
+        try:
+            ok = mod.main()
+        except Exception as e:                       # pragma: no cover
+            print(f"[{name}] ERROR: {type(e).__name__}: {e}")
+            ok = False
+        (ran if ok else missing).append(name)
+    print(f"\nbenchmarks complete: {len(ran)} ran, {len(missing)} missing/failed"
+          + (f" ({', '.join(missing)})" if missing else ""))
+    sys.exit(0 if not missing else 1)
+
+
+if __name__ == "__main__":
+    main()

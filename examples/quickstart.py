@@ -1,0 +1,45 @@
+"""Quickstart: the public API in 60 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import lm
+
+# ---- 1. pick any assigned architecture; reduced() gives a CPU-sized twin
+cfg = registry.reduced(registry.get_config("qwen3-8b"))
+print(f"arch: {cfg.name} ({cfg.n_layers} layers, d={cfg.d_model})")
+
+params = lm.init_params(jax.random.PRNGKey(0), cfg)
+n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+print(f"params: {n/1e6:.2f}M")
+
+# ---- 2. training step (loss + grads)
+tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, cfg.vocab_size)
+loss, metrics = lm.loss_fn(params, {"tokens": tokens}, cfg)
+print(f"initial loss: {float(loss):.3f} (ln V = {np.log(cfg.vocab_size):.3f})")
+
+# ---- 3. serving: prefill a prompt, decode greedily
+logits, cache = lm.prefill(params, tokens[:, :32], cfg, max_len=40)
+tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+out = []
+for t in range(6):
+    logits, cache = lm.decode_step(params, tok, cache, cfg, jnp.int32(32 + t))
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out.append(int(tok[0, 0]))
+print(f"greedy continuation: {out}")
+
+# ---- 4. the paper's optimizer: run one query adaptively
+from repro.sql import datagen, workloads
+from repro.sql.cbo import Estimator
+from repro.baselines import run_spark_default
+
+db = datagen.make_job_like(scale=0.1, seed=0)
+wl = workloads.make_workload("job", n_train=4, n_test_per_template=1)
+res = run_spark_default(db, wl.test[0], Estimator(db, db.stats))
+print(f"query {wl.test[0].name}: {res.latency:.2f}s simulated, "
+      f"{res.total_shuffles} shuffles, {len(res.stages)} stages")
+print("quickstart OK")

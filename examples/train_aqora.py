@@ -1,0 +1,54 @@
+"""End-to-end driver for the paper's system: train AQORA's decision model
+against the staged engine on a JOB-like workload, then compare it with
+Spark SQL's default configuration on held-out queries.
+
+This is the paper-kind end-to-end run (the paper optimizes query serving,
+not LM pre-training): a few hundred RL episodes on one CPU.
+
+  PYTHONPATH=src python examples/train_aqora.py [--episodes 200]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.baselines import run_spark_default
+from repro.core.agent import AgentConfig
+from repro.core.train_loop import evaluate, train_agent
+from repro.sql import datagen, workloads
+from repro.sql.cbo import Estimator
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes", type=int, default=200)
+    ap.add_argument("--scale", type=float, default=0.25)
+    args = ap.parse_args()
+
+    print("building database + workload ...")
+    db = datagen.make_job_like(scale=args.scale, seed=0)
+    wl = workloads.make_workload("job", n_train=100, n_test_per_template=1)
+    est = Estimator(db, db.stats)
+
+    t0 = time.time()
+    print(f"training AQORA for {args.episodes} episodes "
+          f"(curriculum: cbo-only -> +runtime leads -> full) ...")
+    agent, logs = train_agent(db, wl, episodes=args.episodes, seed=0,
+                              cfg=AgentConfig(), est=est, log_every=50)
+    print(f"trained in {time.time()-t0:.0f}s; "
+          f"decision model: {agent.param_count()} params")
+
+    rows = evaluate(db, wl.test, agent, est=est)
+    aq = sum(r["total"] for r in rows)
+    sp = sum(run_spark_default(db, q, est).latency for q in wl.test)
+    fails_aq = sum(r["failed"] for r in rows)
+    print(f"\nheld-out test ({len(wl.test)} queries):")
+    print(f"  Spark default : {sp:8.1f}s")
+    print(f"  AQORA         : {aq:8.1f}s ({(sp-aq)/sp:+.1%}) "
+          f"failures={fails_aq}")
+    ex = next(r for r in rows if r["actions"])
+    print(f"  example intervention on {ex['query']}: {ex['actions']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.adapt.knobs import LayoutPlan
+from repro.adapt.search import LayoutReoptimizer

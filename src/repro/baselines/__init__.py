@@ -1,0 +1,7 @@
+"""The paper's three comparison systems, re-implemented against the same
+staged engine: Spark SQL default (+AQE), Lero-style learning-to-rank over
+cardinality-perturbed candidate plans, and AutoSteer-style greedy
+rule-toggle search."""
+from repro.baselines.spark_default import run_spark_default
+from repro.baselines.lero import LeroOptimizer
+from repro.baselines.autosteer import AutoSteerOptimizer

@@ -1,0 +1,9 @@
+"""AQORA: the paper's primary contribution.
+
+A learned adaptive query optimizer that refines *running* query plans at
+stage boundaries: plan-tree state encoding with true runtime cardinalities
+(encoding.py), TreeCNN actor-critic (nets.py), masked + curriculum PPO
+(ppo.py, agent.py), the Alg. 2 planner-extension actions (actions.py), and
+the rollout/training loop against the staged engine (rollout.py,
+train_loop.py). DQN and alternative encoders for the paper's ablations.
+"""

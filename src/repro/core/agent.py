@@ -1,0 +1,205 @@
+"""AQORA agent: TreeCNN actor + critic, masked policy, PPO update (Alg. 1).
+
+Actor and critic are separate encoder+head networks (~150k parameters
+combined at the defaults, matching Tab. III). All state tensors are padded
+to MAX_NODES, trajectories to (max_steps+1) states, so the PPO update jits
+once per workload.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import nets
+from repro.core.actions import ActionSpace
+from repro.core.encoding import MAX_NODES, WorkloadMeta
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentConfig:
+    net: str = "treecnn"               # treecnn | lstm | fcnn | queryformer
+    hidden: int = 96
+    head_hidden: int = 96
+    families: Tuple[str, ...] = ("cbo", "lead", "noop")
+    max_steps: int = 3                 # hook interventions per query (§VI-A)
+    ppo_epochs: int = 6
+    clip: float = 0.2
+    entropy: float = 0.02              # η
+    gamma: float = 1.0                 # Alg. 1 sets γ=1
+    lr_actor: float = 3e-4
+    lr_critic: float = 1e-3
+    curriculum: Tuple[float, float] = (0.25, 0.55)
+    failure_penalty: float = 300.0     # R(τ) -= sqrt(300) on failure
+
+
+class AqoraAgent:
+    def __init__(self, meta: WorkloadMeta, cfg: AgentConfig = AgentConfig(),
+                 seed: int = 0):
+        self.meta = meta
+        self.cfg = cfg
+        self.space = ActionSpace(meta.n_tables_max, cfg.families)
+        k = jax.random.split(jax.random.PRNGKey(seed), 5)
+        F, H = meta.feat_dim, cfg.hidden
+        self.actor = {
+            "enc": nets.init_encoder(k[0], cfg.net, F, H, MAX_NODES),
+            "head": nets.init_mlp_head(k[1], H, cfg.head_hidden, self.space.d)}
+        self.critic = {
+            "enc": nets.init_encoder(k[2], cfg.net, F, H, MAX_NODES),
+            "head": nets.init_mlp_head(k[3], H, cfg.head_hidden, 1)}
+        self.aopt = adamw_init(self.actor)
+        self.copt = adamw_init(self.critic)
+        self._acfg = AdamWConfig(lr=cfg.lr_actor, weight_decay=0.0, grad_clip=5.0)
+        self._ccfg = AdamWConfig(lr=cfg.lr_critic, weight_decay=0.0, grad_clip=5.0)
+        self.rng = jax.random.PRNGKey(seed + 1)
+        self._build_jits()
+
+    # ------------------------------------------------------------- nets
+    def _build_jits(self):
+        net = self.cfg.net
+
+        def logits_fn(actor, feat, left, right, mask):
+            h = nets.apply_encoder(actor["enc"], net, feat, left, right, mask)
+            return nets.apply_mlp_head(actor["head"], h)
+
+        def value_fn(critic, feat, left, right, mask):
+            h = nets.apply_encoder(critic["enc"], net, feat, left, right, mask)
+            return nets.apply_mlp_head(critic["head"], h)[0]
+
+        self._logits = jax.jit(logits_fn)
+        self._value = jax.jit(value_fn)
+        self._logits_b = jax.jit(jax.vmap(logits_fn, in_axes=(None, 0, 0, 0, 0)))
+        self._value_b = jax.jit(jax.vmap(value_fn, in_axes=(None, 0, 0, 0, 0)))
+
+        clip, eta = self.cfg.clip, self.cfg.entropy
+
+        def masked_logp(actor, feat, left, right, mask, amask):
+            lg = jax.vmap(logits_fn, (None, 0, 0, 0, 0))(actor, feat, left, right, mask)
+            lg = jnp.where(amask > 0, lg, -1e9)
+            return jax.nn.log_softmax(lg, axis=-1)
+
+        def actor_loss(actor, batch):
+            logp_all = masked_logp(actor, batch["feat"], batch["left"],
+                                   batch["right"], batch["mask"], batch["amask"])
+            logp = jnp.take_along_axis(logp_all, batch["action"][:, None], 1)[:, 0]
+            ratio = jnp.exp(logp - batch["old_logp"])
+            q = batch["q"]
+            un = ratio * q
+            cl = jnp.clip(ratio, 1 - clip, 1 + clip) * q
+            l_clip = -jnp.sum(jnp.minimum(un, cl) * batch["valid"]) / \
+                jnp.maximum(batch["valid"].sum(), 1.0)
+            p = jnp.exp(logp_all)
+            ent_term = jnp.sum(jnp.where(batch["amask"] > 0, p * logp_all, 0.0), -1)
+            l_ent = jnp.sum(ent_term * batch["valid"]) / \
+                jnp.maximum(batch["valid"].sum(), 1.0)
+            return l_clip + eta * l_ent
+
+        def critic_loss(critic, sbatch):
+            v = jax.vmap(value_fn, (None, 0, 0, 0, 0))(
+                critic, sbatch["feat"], sbatch["left"], sbatch["right"],
+                sbatch["mask"])
+            err = (v - sbatch["v_target"]) ** 2
+            return jnp.sum(err * sbatch["valid"]) / jnp.maximum(sbatch["valid"].sum(), 1.0)
+
+        def update(actor, critic, aopt, copt, batch, sbatch):
+            al, agrad = jax.value_and_grad(actor_loss)(actor, batch)
+            cl_, cgrad = jax.value_and_grad(critic_loss)(critic, sbatch)
+            actor, aopt, _ = adamw_update(actor, agrad, aopt, self._acfg)
+            critic, copt, _ = adamw_update(critic, cgrad, copt, self._ccfg)
+            return actor, critic, aopt, copt, al, cl_
+
+        self._update = jax.jit(update)
+
+    # ------------------------------------------------------------- policy
+    def policy_probs(self, enc_state, amask: np.ndarray) -> np.ndarray:
+        feat, left, right, mask = enc_state
+        lg = self._logits(self.actor, feat, left, right, mask)
+        lg = jnp.where(jnp.asarray(amask) > 0, lg, -1e9)
+        return np.asarray(jax.nn.softmax(lg))
+
+    def act(self, enc_state, amask: np.ndarray, explore: bool = True) -> Tuple[int, float]:
+        probs = self.policy_probs(enc_state, amask)
+        if explore:
+            self.rng, k = jax.random.split(self.rng)
+            a = int(jax.random.choice(k, len(probs), p=jnp.asarray(probs)))
+        else:
+            a = int(np.argmax(probs))
+        return a, float(np.log(max(probs[a], 1e-12)))
+
+    def value(self, enc_state) -> float:
+        feat, left, right, mask = enc_state
+        return float(self._value(self.critic, feat, left, right, mask))
+
+    # ------------------------------------------------------------- update
+    def ppo_update(self, traj) -> Dict[str, float]:
+        """traj: rollout.Trajectory — implements Alg. 1 exactly: v_pi from
+        realized returns, q from the CURRENT critic, then e epochs of
+        clipped updates against frozen old probabilities."""
+        cfg = self.cfg
+        k = len(traj.actions)
+        if k == 0:
+            return {"actor_loss": 0.0, "critic_loss": 0.0}
+        K = cfg.max_steps + 1
+
+        def pad_states(states):
+            feat = np.zeros((K, MAX_NODES, self.meta.feat_dim), np.float32)
+            left = np.zeros((K, MAX_NODES), np.int32)
+            right = np.zeros((K, MAX_NODES), np.int32)
+            mask = np.zeros((K, MAX_NODES), np.float32)
+            for i, s in enumerate(states[:K]):
+                feat[i], left[i], right[i], mask[i] = s
+            return feat, left, right, mask
+
+        n_states = min(len(traj.states), K)
+        feat, left, right, mask = pad_states(traj.states)
+        svalid = np.zeros(K, np.float32)
+        svalid[:n_states] = 1.0
+
+        # v_pi(s_i) = sum_{j>i} r_j - sqrt(T_execute)   (Alg. 1 line 2; the
+        # paper's +sqrt is a sign typo — R(tau) subtracts it)
+        rs = np.asarray(traj.rewards, np.float32)
+        term = -np.sqrt(traj.t_execute)
+        v_pi = np.zeros(K, np.float32)
+        for i in range(n_states):
+            v_pi[i] = rs[i:].sum() + term
+
+        # q_t = r_{t+1} + v_phi(s_{t+1}) - v_phi(s_t) for every ACTION
+        # (Alg. 1's trailing 0 belongs to the terminal state s_k, which has
+        # no action). If the terminal state s_k was not encodable, fall back
+        # to its realized value v_pi(s_k) = -sqrt(T).
+        v_phi = np.asarray(self._value_b(self.critic, feat, left, right, mask))
+        q = np.zeros(K - 1, np.float32)
+        for t in range(k):
+            v_next = v_phi[t + 1] if t + 1 < n_states else term
+            q[t] = rs[t] + v_next - v_phi[t]
+
+        amask = np.zeros((K - 1, self.space.d), np.float32)
+        action = np.zeros(K - 1, np.int32)
+        old_logp = np.zeros(K - 1, np.float32)
+        tvalid = np.zeros(K - 1, np.float32)
+        for t in range(k):
+            amask[t] = traj.masks[t]
+            action[t] = traj.actions[t]
+            old_logp[t] = traj.logps[t]
+            tvalid[t] = 1.0
+
+        batch = {"feat": feat[:-1], "left": left[:-1], "right": right[:-1],
+                 "mask": mask[:-1], "amask": amask, "action": action,
+                 "old_logp": old_logp, "q": jnp.asarray(q), "valid": tvalid}
+        sbatch = {"feat": feat, "left": left, "right": right, "mask": mask,
+                  "v_target": jnp.asarray(v_pi), "valid": svalid}
+        al = cl = 0.0
+        for _ in range(cfg.ppo_epochs):
+            (self.actor, self.critic, self.aopt, self.copt,
+             al, cl) = self._update(self.actor, self.critic, self.aopt,
+                                    self.copt, batch, sbatch)
+        return {"actor_loss": float(al), "critic_loss": float(cl)}
+
+    def param_count(self) -> int:
+        return sum(int(np.prod(x.shape)) for x in
+                   jax.tree_util.tree_leaves((self.actor, self.critic)))

@@ -1,0 +1,153 @@
+"""DQN variant of the decision model (Fig. 11(a) ablation).
+
+Same TreeCNN encoder and action space as the PPO agent, but value-based:
+epsilon-greedy behaviour policy, experience replay over (s, a, r, s',
+mask', done) transitions, and a periodically-synced target network. The
+paper finds DQN converges slower and plateaus worse in this large,
+non-stationary action space — the benchmark reproduces that comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import nets
+from repro.core.actions import ActionSpace
+from repro.core.encoding import MAX_NODES, WorkloadMeta
+from repro.core.agent import AgentConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class DQNConfig:
+    hidden: int = 96
+    head_hidden: int = 96
+    gamma: float = 1.0
+    eps_start: float = 0.9
+    eps_end: float = 0.05
+    eps_decay_episodes: int = 150
+    buffer_size: int = 4096
+    batch_size: int = 64
+    target_sync: int = 20              # episodes
+    lr: float = 5e-4
+
+
+class DQNAgent:
+    """Duck-types AqoraAgent's act/update interface for the rollout loop."""
+
+    def __init__(self, meta: WorkloadMeta, cfg: AgentConfig = AgentConfig(),
+                 dqn: DQNConfig = DQNConfig(), seed: int = 0):
+        self.meta, self.cfg, self.dcfg = meta, cfg, dqn
+        self.space = ActionSpace(meta.n_tables_max, cfg.families)
+        k = jax.random.split(jax.random.PRNGKey(seed), 2)
+        F, H = meta.feat_dim, dqn.hidden
+        self.qnet = {"enc": nets.init_encoder(k[0], "treecnn", F, H, MAX_NODES),
+                     "head": nets.init_mlp_head(k[1], H, dqn.head_hidden,
+                                                self.space.d)}
+        self.target = jax.tree_util.tree_map(lambda x: x, self.qnet)
+        self.opt = adamw_init(self.qnet)
+        self._ocfg = AdamWConfig(lr=dqn.lr, weight_decay=0.0, grad_clip=5.0)
+        self.buffer: Deque = deque(maxlen=dqn.buffer_size)
+        self.episode = 0
+        self.rng = np.random.default_rng(seed + 1)
+
+        def qvals(params, feat, left, right, mask):
+            h = nets.apply_encoder(params["enc"], "treecnn", feat, left, right, mask)
+            return nets.apply_mlp_head(params["head"], h)
+
+        self._q = jax.jit(qvals)
+        self._q_b = jax.jit(jax.vmap(qvals, in_axes=(None, 0, 0, 0, 0)))
+
+        def loss(params, target, batch):
+            q = jax.vmap(qvals, (None, 0, 0, 0, 0))(
+                params, batch["feat"], batch["left"], batch["right"], batch["mask"])
+            qa = jnp.take_along_axis(q, batch["action"][:, None], 1)[:, 0]
+            qn = jax.vmap(qvals, (None, 0, 0, 0, 0))(
+                target, batch["nfeat"], batch["nleft"], batch["nright"], batch["nmask"])
+            qn = jnp.where(batch["namask"] > 0, qn, -1e9)
+            tgt = batch["reward"] + dqn.gamma * jnp.max(qn, -1) * (1 - batch["done"])
+            return jnp.mean((qa - jax.lax.stop_gradient(tgt)) ** 2)
+
+        def update(params, target, opt, batch):
+            l, g = jax.value_and_grad(loss)(params, target, batch)
+            params, opt, _ = adamw_update(params, g, opt, self._ocfg)
+            return params, opt, l
+
+        self._update = jax.jit(update)
+
+    # ---- rollout interface (duck-typed with AqoraAgent)
+    def act(self, enc_state, amask, explore=True) -> Tuple[int, float]:
+        d = self.dcfg
+        eps = max(d.eps_end, d.eps_start - (d.eps_start - d.eps_end)
+                  * self.episode / d.eps_decay_episodes)
+        legal = np.flatnonzero(amask > 0)
+        if explore and self.rng.random() < eps:
+            return int(self.rng.choice(legal)), 0.0
+        feat, left, right, mask = enc_state
+        q = np.array(self._q(self.qnet, feat, left, right, mask))
+        q[amask <= 0] = -1e9
+        return int(np.argmax(q)), 0.0
+
+    def value(self, enc_state) -> float:
+        feat, left, right, mask = enc_state
+        return float(np.max(self._q(self.qnet, feat, left, right, mask)))
+
+    # ---- learning
+    def record(self, traj):
+        """Push (s, a, r, s', amask', done); the terminal reward folds
+        -sqrt(T) into the last transition."""
+        k = len(traj.actions)
+        term = -float(np.sqrt(traj.t_execute))
+        for t in range(k):
+            s = traj.states[t]
+            done = t == k - 1 or t + 1 >= len(traj.states)
+            s2 = traj.states[min(t + 1, len(traj.states) - 1)]
+            am2 = traj.masks[min(t + 1, len(traj.masks) - 1)]
+            r = traj.rewards[t] + (term if done else 0.0)
+            self.buffer.append((s, traj.actions[t], r, s2, am2, float(done)))
+
+    def train_step(self) -> float:
+        d = self.dcfg
+        if len(self.buffer) < d.batch_size:
+            return 0.0
+        idx = self.rng.choice(len(self.buffer), size=d.batch_size, replace=False)
+        rows = [self.buffer[i] for i in idx]
+        F = self.meta.feat_dim
+
+        def stack(sel):
+            return (np.stack([r[sel][0] for r in rows]),
+                    np.stack([r[sel][1] for r in rows]),
+                    np.stack([r[sel][2] for r in rows]),
+                    np.stack([r[sel][3] for r in rows]))
+
+        f, l, rr, m = stack(0)
+        nf, nl, nr, nm = stack(3)
+        batch = {"feat": f, "left": l, "right": rr, "mask": m,
+                 "action": np.array([r[1] for r in rows], np.int32),
+                 "reward": np.array([r[2] for r in rows], np.float32),
+                 "nfeat": nf, "nleft": nl, "nright": nr, "nmask": nm,
+                 "namask": np.stack([r[4] for r in rows]).astype(np.float32),
+                 "done": np.array([r[5] for r in rows], np.float32)}
+        self.qnet, self.opt, l_ = self._update(self.qnet, self.target, self.opt, batch)
+        return float(l_)
+
+    def end_episode(self):
+        self.episode += 1
+        if self.episode % self.dcfg.target_sync == 0:
+            self.target = jax.tree_util.tree_map(lambda x: x, self.qnet)
+
+    # PPO-interface shim so train_loop can drive either agent
+    def ppo_update(self, traj) -> Dict[str, float]:
+        self.record(traj)
+        losses = [self.train_step() for _ in range(4)]
+        self.end_episode()
+        return {"actor_loss": float(np.mean(losses)), "critic_loss": 0.0}
+
+    def param_count(self) -> int:
+        return sum(int(np.prod(x.shape)) for x in
+                   jax.tree_util.tree_leaves(self.qnet))

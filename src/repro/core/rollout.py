@@ -1,0 +1,86 @@
+"""Rollouts: run one query under AQE with the agent as the planner
+extension (§IV workflow steps 1-4).
+
+The hook fires at stage boundaries (and once pre-execution — AQORA's
+two-phase mechanism reuses in-execution strategies at planning time), at
+most `max_steps` times. Each firing: encode partial plan + true cards ->
+policy -> apply action via Alg. 2 -> shaping reward from Δshuffles.
+The hook's real wall time (model inference + plan transformation + any CBO
+re-planning) is charged to C_plan, mirroring the paper's ~317 ms/query
+optimization overhead accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.actions import action_mask, apply_action
+from repro.core.encoding import WorkloadMeta, encode_state
+from repro.sql.cbo import Estimator
+from repro.sql.cluster import ClusterModel
+from repro.sql.executor import RunResult, run_adaptive
+from repro.sql.plans import syntactic_plan
+
+
+@dataclasses.dataclass
+class Trajectory:
+    states: List = dataclasses.field(default_factory=list)
+    actions: List[int] = dataclasses.field(default_factory=list)
+    logps: List[float] = dataclasses.field(default_factory=list)
+    masks: List[np.ndarray] = dataclasses.field(default_factory=list)
+    rewards: List[float] = dataclasses.field(default_factory=list)
+    decoded: List = dataclasses.field(default_factory=list)
+    t_execute: float = 0.0
+    failed: bool = False
+    result: Optional[RunResult] = None
+    hook_seconds: float = 0.0
+
+
+def rollout(db, query, est: Estimator, agent, *, stage: int = 3,
+            explore: bool = True,
+            cluster: ClusterModel = ClusterModel()) -> Trajectory:
+    traj = Trajectory()
+    meta = agent.meta
+    extra_plan = [0.0]
+
+    def hook(state):
+        t0 = time.perf_counter()
+        enc = encode_state(state, meta)
+        am = action_mask(agent.space, state, stage=stage)
+        a, logp = agent.act(enc, am, explore=explore)
+        new_plan, r, extra = apply_action(agent.space, state, a)
+        traj.states.append(enc)
+        traj.actions.append(a)
+        traj.logps.append(logp)
+        traj.masks.append(am)
+        traj.rewards.append(r)
+        traj.decoded.append(agent.space.decode(a))
+        extra_plan[0] += extra
+        traj.hook_seconds += time.perf_counter() - t0
+        return new_plan
+
+    plan0 = syntactic_plan(query)
+    res = run_adaptive(db, query, plan0, est, cluster, hook=hook,
+                       max_hook_steps=agent.cfg.max_steps,
+                       plan_time=0.0)
+    # terminal state s_k for the critic (the fully-executed plan)
+    final = res.final_plan
+    if final is not None:
+        class _S:                                     # minimal view
+            pass
+        s = _S()
+        s.query, s.plan, s.mats, s.est = query, final, {}, est
+        s.step, s.stages_done, s.elapsed = agent.cfg.max_steps, len(res.stages), res.latency
+        try:
+            traj.states.append(encode_state(s, meta))
+        except Exception:
+            pass
+    traj.t_execute = cluster.timeout if res.failed else res.latency
+    traj.failed = res.failed
+    # C_plan = hook wall time (model inference + Alg. 2) + CBO re-planning
+    res.plan_time += traj.hook_seconds + extra_plan[0]
+    traj.result = res
+    return traj

@@ -1,0 +1,89 @@
+"""AQORA training + evaluation loops (§V-A4, §VII-A4c).
+
+train_agent: episodes over the training workload with the curriculum
+schedule; one PPO update per completed query (the paper replays the k-step
+trajectory after each query, Alg. 1).
+
+evaluate: run test queries with the trained policy (argmax, no
+exploration); returns per-query RunResults for the benchmark tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.actions import curriculum_stage
+from repro.core.agent import AgentConfig, AqoraAgent
+from repro.core.encoding import WorkloadMeta
+from repro.core.rollout import rollout
+from repro.sql.catalog import Database
+from repro.sql.cbo import Estimator
+from repro.sql.cluster import ClusterModel
+from repro.sql.workloads import Workload
+
+
+@dataclasses.dataclass
+class EpisodeLog:
+    episode: int
+    query: str
+    latency: float
+    failed: bool
+    actions: List
+    rewards: List[float]
+    actor_loss: float
+    critic_loss: float
+    stage: int
+
+
+def train_agent(db: Database, workload: Workload, *,
+                episodes: int = 300, seed: int = 0,
+                cfg: AgentConfig = AgentConfig(),
+                cluster: ClusterModel = ClusterModel(),
+                est: Optional[Estimator] = None,
+                use_curriculum: bool = True,
+                agent=None,
+                log_every: int = 0) -> Tuple[AqoraAgent, List[EpisodeLog]]:
+    meta = WorkloadMeta.from_workload(workload)
+    if agent is None:
+        agent = AqoraAgent(meta, cfg, seed=seed)
+    est = est or Estimator(db, db.stats)
+    rng = np.random.default_rng(seed)
+    logs: List[EpisodeLog] = []
+    for ep in range(episodes):
+        q = workload.train[int(rng.integers(len(workload.train)))]
+        stage = curriculum_stage(ep, episodes, cfg.curriculum) if use_curriculum else 3
+        traj = rollout(db, q, est, agent, stage=stage, explore=True,
+                       cluster=cluster)
+        m = agent.ppo_update(traj)
+        logs.append(EpisodeLog(ep, q.name, traj.t_execute, traj.failed,
+                               traj.decoded, traj.rewards,
+                               m["actor_loss"], m["critic_loss"], stage))
+        if log_every and (ep + 1) % log_every == 0:
+            recent = logs[-log_every:]
+            lat = np.mean([l.latency for l in recent])
+            fails = sum(l.failed for l in recent)
+            print(f"  ep {ep+1:4d} stage={stage} mean_lat={lat:7.2f}s "
+                  f"fails={fails} aloss={m['actor_loss']:+.3f}")
+    return agent, logs
+
+
+def evaluate(db: Database, queries, agent: AqoraAgent, *,
+             est: Optional[Estimator] = None,
+             cluster: ClusterModel = ClusterModel()) -> List[Dict]:
+    est = est or Estimator(db, db.stats)
+    out = []
+    for q in queries:
+        traj = rollout(db, q, est, agent, stage=3, explore=False,
+                       cluster=cluster)
+        r = traj.result
+        out.append({
+            "query": q.name, "latency": r.latency, "plan_time": r.plan_time,
+            "total": r.total, "failed": r.failed,
+            "failure_kind": r.failure_kind, "actions": traj.decoded,
+            "shuffles": r.total_shuffles,
+            "shuffle_bytes": r.total_shuffle_bytes, "bushy": r.bushy,
+        })
+    return out

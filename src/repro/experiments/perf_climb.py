@@ -1,0 +1,50 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ dry-run lowering needs the production mesh (same rule as dryrun.py).
+
+"""§Perf hillclimbs: drive the three selected cells with the Plane-B
+re-optimizer. Each iteration re-lowers the cell and logs
+hypothesis -> predicted -> measured -> verdict into results/perf/.
+
+Cells (chosen per the assignment's criteria from the baseline table):
+  qwen3-8b     x train_4k   — representative cell, Plane-B loop end-to-end
+  dbrx-132b    x train_4k   — most collective-bound (139.8 s baseline)
+  minicpm3-4b  x decode_32k — worst useful-FLOPs ratio (0.002: MLA latent
+                              cache re-expanded every token)
+"""
+import json
+import time
+
+from repro.adapt.knobs import BASELINE, LayoutPlan
+from repro.adapt.search import LayoutReoptimizer
+
+CELLS = [
+    ("qwen3-8b", "train_4k", "train"),
+    ("dbrx-132b", "train_4k", "train"),
+    ("minicpm3-4b", "decode_32k", "decode"),
+]
+
+
+def main():
+    for arch, shape, kind in CELLS:
+        t0 = time.time()
+        print(f"=== hillclimb {arch} x {shape} ===", flush=True)
+        opt = LayoutReoptimizer(arch, shape)
+        best, logs = opt.climb(max_iters=8, kind=kind)
+        print(f"--- {arch} x {shape}: best layout {best.name()} "
+              f"({len(logs)} iterations, {time.time()-t0:.0f}s)", flush=True)
+        for l in logs:
+            print(f"  it{l.iteration}: {l.layout} -> {l.verdict}")
+
+
+if __name__ == "__main__":
+    main()
+
+def bonus_decode_cell():
+    """4th cell: qwen1.5-4b decode_32k (most collective-bound decode)."""
+    opt = LayoutReoptimizer("qwen1.5-4b", "decode_32k")
+    best, logs = opt.climb(max_iters=5, kind="decode")
+    print(f"--- qwen1.5-4b x decode_32k: best {best.name()}")
+    for l in logs:
+        print(f"  it{l.iteration}: {l.layout} -> {l.verdict}")

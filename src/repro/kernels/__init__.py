@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers, each with a
+pure-jnp oracle in ref.py and a jit'd model-layout wrapper in ops.py:
+
+  flash_attention — online-softmax attention, VMEM accumulators, GQA index
+                    maps, causal/sliding-window/softcap
+  mamba_scan      — chunked selective scan, VMEM-resident state
+  tree_conv       — AQORA TreeCNN layer; child gathers as one-hot MXU matmuls
+
+Validated in interpret=True mode on CPU (tests/test_kernels.py); on real
+TPUs they swap in behind the model's pure-jnp paths.
+"""

@@ -1,0 +1,126 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU adaptation (vs. the CUDA original): the online-softmax recurrence is
+blocked for the MXU — (block_q x hd) @ (hd x block_k) score tiles with
+fp32 accumulators held in VMEM scratch that persist across the sequential
+innermost grid dimension (TPU grids execute in order, so the k-block loop
+is a grid axis, not an in-kernel loop). Causal/sliding-window masks are
+computed from broadcasted iotas; fully-masked tiles skip their MXU work
+with pl.when, so sliding-window attention costs O(Sq * window).
+
+Layout: q (BH, Sq, hd), k/v (BKV, Sk, hd) with GQA group size G = BH//BKV
+resolved in the k/v BlockSpec index maps (no materialized head broadcast).
+VMEM working set per grid cell: q/k/v/o tiles + (block_q x hd) fp32 acc ~=
+(3*block_k + 2*block_q) * hd * 2B + block_q*hd*4B ~= 0.43 MB at the
+128/128/hd=128 defaults — far under the ~16 MB/core budget, leaving room
+for the pipeline's double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qref, kref, vref, oref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, softcap, block_q, block_k, n_k, seq_off,
+            sk_real):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qpos = (qi * block_q + seq_off
+            + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0))
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < sk_real                      # key padding
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= kpos > qpos - window
+
+    @pl.when(jnp.any(mask))
+    def _compute():
+        q = qref[0].astype(jnp.float32)                  # (bq, hd)
+        k = kref[0].astype(jnp.float32)                  # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap and softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)      # (bq, bk)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        v = vref[0].astype(jnp.float32)                   # (bk, hd)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        oref[0] = (acc_scr[...] / l).astype(oref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None, block_q=128, block_k=128, interpret=False):
+    """q: (BH, Sq, hd); k/v: (BKV, Sk, hd) with BH % BKV == 0 (GQA).
+    Queries are right-aligned against keys: qpos = arange(Sq) + (Sk - Sq),
+    so prefill (Sq == Sk) and decode-suffix calls share one kernel."""
+    BH, Sq, hd = q.shape
+    BKV, Sk, _ = k.shape
+    assert BH % BKV == 0
+    G = BH // BKV
+    scale = (hd ** -0.5) if scale is None else scale
+    block_q = min(block_q, max(Sq, 8))
+    block_k = min(block_k, max(Sk, 8))
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    seq_off = Sk - Sq
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    n_q = q.shape[1] // block_q
+    n_k = k.shape[1] // block_k
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, n_k=n_k, seq_off=seq_off,
+        sk_real=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b // G, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, q.shape[1], hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    if pq:
+        out = out[:, :Sq]
+    return out

@@ -1,0 +1,42 @@
+"""Jit'd public wrappers bridging model-layer shapes to the kernels.
+
+`use_pallas` flips the model between the pure-jnp paths (CPU/dry-run; the
+collectives and cost structure XLA sees) and the Pallas kernels (real TPU).
+On this CPU container the kernels run only under interpret=True, which is
+what the per-kernel allclose tests exercise.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.tree_conv import tree_conv
+
+
+def mha_flash(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
+              interpret=False):
+    """Model-layout wrapper: q (B, Sq, H, hd), k/v (B, Sk, K, hd) GQA.
+    Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * K, k.shape[1], hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * K, v.shape[1], hd)
+    out = flash_attention(qf, kf, vf, causal=causal, window=window,
+                          softcap=softcap, scale=scale, interpret=interpret)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+
+
+def selective_scan_fused(x, dt, A, Bs, Cs, D_skip, *, chunk=128,
+                         interpret=False):
+    """Mamba block core matching models.mamba.selective_scan's contract:
+    returns (y + x * D_skip, h_last is NOT returned — training path only)."""
+    y = mamba_scan(x, dt, A, Bs, Cs, chunk=chunk, interpret=interpret)
+    return y + x.astype(jnp.float32) * D_skip
+
+
+def tree_conv_batch(feat, left, right, mask, params, *, interpret=False):
+    """AQORA TreeCNN layer: params {wr, wl, wrt, b} as in core.nets."""
+    return tree_conv(feat, left, right, mask, params["wr"], params["wl"],
+                     params["wrt"], params["b"], interpret=interpret)

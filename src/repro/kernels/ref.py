@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        scale=None):
+    """q: (BH, Sq, hd), k/v: (BH, Sk, hd). fp32 softmax, full scores."""
+    hd = q.shape[-1]
+    scale = (hd ** -0.5) if scale is None else scale
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    Sq, Sk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)     # right-aligned positions
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)            # fully-masked rows -> 0
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mamba_scan_ref(x, dt, A, Bs, Cs, h0=None):
+    """Sequential selective-scan oracle.
+    x/dt: (B, S, di); Bs/Cs: (B, S, N); A: (di, N); h0: (B, di, N).
+    Returns (y (B,S,di), h_last (B,di,N)), fp32."""
+    B, S, di = x.shape
+    A = jnp.asarray(A)
+    N = A.shape[1]
+    xf = jnp.asarray(x, jnp.float32)
+    dtf = jnp.asarray(dt, jnp.float32)
+    Bf = jnp.asarray(Bs, jnp.float32)
+    Cf = jnp.asarray(Cs, jnp.float32)
+    h = jnp.zeros((B, di, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        a = jnp.exp(dtf[:, t, :, None] * A)                 # (B, di, N)
+        b = (dtf[:, t] * xf[:, t])[..., None] * Bf[:, t, None, :]
+        h = a * h + b
+        y = jnp.einsum("bdn,bn->bd", h, Cf[:, t])
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(S))
+    return ys.transpose(1, 0, 2), h
+
+
+def tree_conv_ref(feat, left, right, mask, wr, wl, wrt, b):
+    """Neo-style tree convolution oracle.
+    feat: (N, F); left/right: (N,) child indices (0 = null, row 0 zeroed);
+    returns (N, H) leaky-relu activations, padding re-zeroed."""
+    h = feat * mask[:, None]
+    out = h @ wr + h[left] @ wl + h[right] @ wrt + b
+    return jax.nn.leaky_relu(out) * mask[:, None]

@@ -1,0 +1,69 @@
+"""Neo-style tree convolution as a Pallas TPU kernel (AQORA's decision-
+model hot spot: called at every stage boundary of every running query).
+
+TPU adaptation: child gathers (h[left], h[right]) are data-dependent loads
+— poison for the TPU's vector memory. We re-express them as one-hot
+matmuls: gather(h, idx) == onehot(idx) @ h, turning the whole layer into
+three MXU matmuls fused in one VMEM-resident kernel:
+
+    out = leaky_relu(h @ Wr + (L @ h) @ Wl + (R @ h) @ Wrt + b) * mask
+
+Trees are padded to MAX_NODES=64, so a whole batch tile (trees x nodes x
+feat) fits VMEM comfortably; grid is over tree batches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(h_ref, lo_ref, ro_ref, m_ref, wr_ref, wl_ref, wrt_ref, b_ref,
+            o_ref):
+    h = h_ref[0].astype(jnp.float32)          # (N, F)
+    m = m_ref[0].astype(jnp.float32)          # (N, 1)
+    h = h * m
+    lo = lo_ref[0].astype(jnp.float32)        # (N, N) one-hot(left)
+    ro = ro_ref[0].astype(jnp.float32)
+    hl = jax.lax.dot_general(lo, h, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    hr = jax.lax.dot_general(ro, h, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    out = (h @ wr_ref[...].astype(jnp.float32)
+           + hl @ wl_ref[...].astype(jnp.float32)
+           + hr @ wrt_ref[...].astype(jnp.float32)
+           + b_ref[...].astype(jnp.float32)[None, :])
+    out = jnp.where(out > 0, out, 0.01 * out)           # leaky_relu
+    o_ref[0] = (out * m).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tree_conv(feat, left, right, mask, wr, wl, wrt, b, *, interpret=False):
+    """feat: (B, N, F); left/right: (B, N) int32 child indices (0 = null,
+    row 0 must be a zero row); mask: (B, N); weights (F, H), b (H,).
+    Returns (B, N, H)."""
+    Bt, N, F = feat.shape
+    H = wr.shape[1]
+    onehot_l = jax.nn.one_hot(left, N, dtype=feat.dtype)     # (B, N, N)
+    onehot_r = jax.nn.one_hot(right, N, dtype=feat.dtype)
+    m = mask[..., None].astype(feat.dtype)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(Bt,),
+        in_specs=[
+            pl.BlockSpec((1, N, F), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, N, N), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, N, N), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, N, 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((F, H), lambda i: (0, 0)),
+            pl.BlockSpec((F, H), lambda i: (0, 0)),
+            pl.BlockSpec((F, H), lambda i: (0, 0)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, N, H), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bt, N, H), feat.dtype),
+        interpret=interpret,
+    )(feat, onehot_l, onehot_r, m, wr, wl, wrt, b)

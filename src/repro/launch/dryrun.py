@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax-importing import: jax locks the device count on
+# first backend init. 512 placeholder host devices let jax.make_mesh build
+# the production meshes. Set here ONLY — tests/benches must see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding rules produce a consistent SPMD program (compile succeeds,
+    no sharding mismatch / unsupported collective),
+  * it fits per-device HBM (memory_analysis),
+  * and it yields the roofline terms (cost_analysis + HLO collective parse).
+
+Results are written incrementally to results/dryrun/<mesh>/<arch>__<shape>.json
+so a long sweep can be resumed / monitored.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.launch import hloanalysis
+from repro.launch import roofline as rl
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import MeshAxes, batch_specs, cache_specs, param_specs
+from repro.sharding import act as act_sharding
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _useful_params(cfg) -> int:
+    """Active params for the 6ND/2ND model; untied embed tables do no matmul."""
+    n = cfg.active_param_count()
+    if not cfg.tie_embeddings and cfg.family != "audio":
+        n -= cfg.vocab_size * cfg.d_model
+    return n
+
+
+def shardings_for(cfg, shape, mesh, layout=None):
+    kv_seq = bool(layout and layout.kv_seq_shard)
+    axes = MeshAxes.from_mesh(mesh)
+    pspec = param_specs(steps_mod.params_struct(cfg), axes)
+    bspec = batch_specs(steps_mod.batch_struct(cfg, shape), axes)
+    if shape.kind == "train":
+        ospec = param_specs(steps_mod.opt_struct(cfg), axes)
+        in_specs = (pspec, ospec, bspec)
+        out_specs = (pspec, ospec,
+                     jax.tree_util.tree_map(lambda _: P(), {
+                         "loss": 0, "ce": 0, "aux": 0, "grad_norm": 0, "lr": 0}))
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        cspec = cache_specs(steps_mod.cache_struct(cfg, shape), axes, kv_seq=kv_seq)
+        dp = axes.dp_axes if axes.pod else axes.data
+        logit_spec = P(dp, axes.model if cfg.vocab_size % axes.size(axes.model) == 0 else None) \
+            if shape.global_batch % axes.dp_size == 0 else P(None, None)
+        in_specs = (pspec, bspec)
+        out_specs = (logit_spec, cspec)
+        donate = ()
+    else:
+        cspec = cache_specs(steps_mod.cache_struct(cfg, shape), axes, kv_seq=kv_seq)
+        dp = axes.dp_axes if axes.pod else axes.data
+        logit_spec = P(dp, axes.model if cfg.vocab_size % axes.size(axes.model) == 0 else None) \
+            if shape.global_batch % axes.dp_size == 0 else P(None, None)
+        in_specs = (pspec, cspec, bspec)
+        out_specs = (logit_spec, cspec)
+        donate = (1,)
+    return _named(mesh, in_specs), _named(mesh, out_specs), donate
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose=True,
+             layout=None) -> dict:
+    """layout: optional repro.adapt.knobs.LayoutPlan overriding the default
+    activation layout (the §Perf hillclimb re-lowers cells through here)."""
+    cfg = registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    if shape.kind == "train" and layout is not None and layout.grad_compress:
+        fn = steps_mod.make_train_step(cfg, grad_compress=True)
+    else:
+        fn = steps_mod.step_fn(cfg, shape)
+    in_sds = steps_mod.input_specs(cfg, shape)
+    in_sh, out_sh, donate = shardings_for(cfg, shape, mesh, layout)
+
+    axes = MeshAxes.from_mesh(mesh)
+    pol = act_sharding.ActivationPolicy(
+        dp_axes=axes.dp_axes, tp_axis=axes.model,
+        dp_size=axes.dp_size, tp_size=axes.size(axes.model),
+        attn_mode=layout.attn_mode if layout else "seq",
+        ce_chunk=layout.ce_chunk if layout else None,
+        remat=layout.remat if layout else "full",
+        attn_remat=layout.attn_remat if layout else False,
+        mla_absorb=layout.mla_absorb if layout else False,
+        attn_scores_bf16=layout.attn_scores_bf16 if layout else False,
+        moe_dispatch=layout.moe_dispatch if layout else "global",
+        mesh=mesh)
+    t0 = time.time()
+    with mesh, act_sharding.policy(pol):
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*in_sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = hloanalysis.analyze(compiled.as_text())
+    coll = dict(hlo.collectives)
+    coll["total"] = hlo.coll_total
+
+    # cost_analysis visits scan bodies once; the HLO analyzer multiplies by
+    # trip count (tests/test_roofline.py) — use the analyzer for the roofline.
+    flops = hlo.flops
+    byt = hlo.bytes
+    n_use = _useful_params(cfg)
+    roof = rl.Roofline(
+        flops_per_device=flops, bytes_per_device=byt,
+        coll_bytes_per_device=hlo.coll_total, chips=chips,
+        model_flops=rl.model_flops(cfg, shape, n_use))
+
+    mem_d = {}
+    for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        mem_d[k] = int(getattr(mem, k, 0))
+    # live bytes per device ~ args + temps (outputs alias donated args)
+    mem_d["live_bytes_per_device"] = (
+        mem_d["argument_size_in_bytes"] + mem_d["temp_size_in_bytes"]
+        + mem_d["output_size_in_bytes"] - mem_d["alias_size_in_bytes"])
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "memory": mem_d,
+        "cost_analysis": {"flops": float(cost.get("flops", 0.0)),
+                          "bytes": float(cost.get("bytes accessed", 0.0)),
+                          "note": "scan bodies counted once; see hlo_analysis"},
+        "hlo_analysis": {"flops": flops, "bytes": byt},
+        "collectives": coll, "roofline": roof.to_dict(),
+        "ok": True,
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} on {rec['mesh']} ==")
+        print(f"memory_analysis: {mem}")
+        print(f"cost_analysis: flops={flops:.3e} bytes={byt:.3e}")
+        print(f"collectives: { {k: f'{v:.3e}' for k, v in coll.items()} }")
+        print(f"roofline: compute={roof.t_compute:.4f}s memory={roof.t_memory:.4f}s "
+              f"collective={roof.t_collective:.4f}s -> {roof.bottleneck}-bound, "
+              f"useful={roof.useful_flops_ratio:.3f} mfu_bound={roof.mfu_bound:.3f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true", help="recompute existing cells")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch, shape, ok, why in registry.assigned_cells():
+            cells.append((arch, shape, ok, why))
+    else:
+        cells.append((args.arch, args.shape, True, ""))
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for multi in meshes:
+        mdir = RESULTS / ("multi" if multi else "single")
+        mdir.mkdir(parents=True, exist_ok=True)
+        for arch, shape, ok, why in cells:
+            out = mdir / f"{arch}__{shape}.json"
+            if out.exists() and not args.force:
+                prev = json.loads(out.read_text())
+                if prev.get("ok"):
+                    print(f"skip (cached): {out.name}")
+                    continue
+            if not ok:
+                out.write_text(json.dumps(
+                    {"arch": arch, "shape": shape, "ok": True,
+                     "skipped": True, "reason": why}, indent=1))
+                print(f"skip (n/a): {arch} x {shape}: {why}")
+                continue
+            try:
+                rec = run_cell(arch, shape, multi)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape, "ok": False,
+                       "mesh": "2x16x16" if multi else "16x16",
+                       "error": f"{type(e).__name__}: {e}"}
+                n_fail += 1
+            out.write_text(json.dumps(rec, indent=1))
+    print(f"done; failures={n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Roofline model for the dry-run: three terms from the compiled artifact.
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bw_per_chip
+  collective = ICI_traffic_per_device / ICI_link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the post-SPMD module is
+the per-device program, verified by ``tests/test_roofline.py::test_cost_
+analysis_is_per_device``). Collective traffic is NOT in cost_analysis, so we
+parse the optimized HLO text and sum per-op traffic with ring-algorithm
+multipliers derived from each op's replica_groups size g:
+
+  all-gather          out * (g-1)/g
+  all-reduce          2 * out * (g-1)/g        (reduce-scatter + all-gather)
+  reduce-scatter      out * (g-1)              (operand bytes ~ out*g)
+  all-to-all          out * (g-1)/g
+  collective-permute  out
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|\w+\[[\d,]*\][^\s]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of 'f32[4,8]' or a tuple '(f32[4], bf16[2,2])'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS2_RE.search(line)          # iota v2 format [n_groups,group_size]
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def collective_traffic_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device ICI traffic (bytes), per collective kind + total."""
+    out: Dict[str, float] = {"all-gather": 0.0, "all-reduce": 0.0,
+                             "reduce-scatter": 0.0, "all-to-all": 0.0,
+                             "collective-permute": 0.0}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        shape_str, op, _ = m.groups()
+        b = _shape_bytes(shape_str)
+        g = _group_size(line)
+        if op == "all-gather":
+            # async start ops return (input, output) tuples: use the larger
+            t = b * (g - 1) / g
+        elif op == "all-reduce":
+            t = 2 * b * (g - 1) / g
+        elif op == "reduce-scatter":
+            t = b * (g - 1)
+        elif op == "all-to-all":
+            t = b * (g - 1) / g
+        else:
+            t = b
+        out[op] += t
+    out["total"] = sum(out.values())
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    chips: int
+    model_flops: float = 0.0          # 6*N*D (train) / 2*N*D (serve), global
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs * chips): compiled-compute usefulness."""
+        tot = self.flops_per_device * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline bound."""
+        if self.t_bound == 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * self.t_bound)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "t_bound_s": self.t_bound,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def model_flops(cfg, shape, n_params_active: int) -> float:
+    """6ND for train, 2ND for inference-forward. For decode, D = one token
+    per sequence (the step processes global_batch tokens)."""
+    if shape.kind == "train":
+        toks = shape.seq_len * shape.global_batch
+        return 6.0 * n_params_active * toks
+    if shape.kind == "prefill":
+        toks = shape.seq_len * shape.global_batch
+        return 2.0 * n_params_active * toks
+    return 2.0 * n_params_active * shape.global_batch

@@ -1,0 +1,108 @@
+"""Step functions + ShapeDtypeStruct input specs for every (arch x shape).
+
+These are the exact functions the dry-run lowers and the real launchers run:
+  * train_step  — fwd + bwd + AdamW          (train_4k)
+  * prefill     — prompt -> logits + cache   (prefill_32k)
+  * serve_step  — one decode token against a seq_len KV cache
+                                              (decode_32k / long_500k)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+
+# ------------------------------------------------------------------ steps
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    total_steps: int = 10_000, grad_compress: bool = False):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.loss_fn, has_aux=True)(params, batch, cfg)
+        if grad_compress:
+            from repro.optim.compress import compress_grads
+            grads, _ = compress_grads(grads)
+        lr_scale = cosine_schedule(opt_state["step"],
+                                   warmup=total_steps // 50, total=total_steps)
+        params, opt_state, om = adamw_update(params, grads, opt_state,
+                                             opt_cfg, lr_scale)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        memory = batch.get("memory")
+        if cfg.encoder is not None:
+            memory = lm.encode(params, batch["frames"], cfg)
+        return lm.prefill(params, batch["tokens"], cfg, max_len, memory=memory)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, batch):
+        return lm.decode_step(params, batch["token"], cache, cfg, batch["pos"])
+    return serve_step
+
+
+# ------------------------------------------------------------------ specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the data inputs of one cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["memory"] = _sds((B, cfg.vision_tokens, cfg.d_model), cfg.cdtype)
+        if cfg.encoder is not None:
+            batch["frames"] = _sds((B, cfg.encoder.n_frames, cfg.d_model), jnp.float32)
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"token": _sds((B, 1), jnp.int32), "pos": _sds((), jnp.int32)}
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(lm.init_params, cfg=cfg), jax.random.key(0))
+
+
+def opt_struct(cfg: ModelConfig):
+    p = params_struct(cfg)
+    return jax.eval_shape(
+        functools.partial(adamw_init, moment_dtype=jnp.dtype(cfg.opt_moment_dtype)), p)
+
+
+def cache_struct(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple:
+    """Full positional ShapeDtypeStruct tuple for the cell's step function.
+
+    train:   (params, opt_state, batch)
+    prefill: (params, batch)
+    decode:  (params, cache, batch)
+    """
+    if shape.kind == "train":
+        return (params_struct(cfg), opt_struct(cfg), batch_struct(cfg, shape))
+    if shape.kind == "prefill":
+        return (params_struct(cfg), batch_struct(cfg, shape))
+    return (params_struct(cfg), cache_struct(cfg, shape), batch_struct(cfg, shape))
+
+
+def step_fn(cfg: ModelConfig, shape: ShapeConfig):
+    if shape.kind == "train":
+        return make_train_step(cfg)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, max_len=shape.seq_len)
+    return make_serve_step(cfg)

@@ -1,0 +1,147 @@
+"""End-to-end LM training driver.
+
+Composes the whole substrate: config registry -> sharded params + AdamW ->
+deterministic data pipeline (prefetching) -> jitted train_step under the
+active mesh -> step-atomic async checkpoints -> straggler telemetry. On
+the CPU container it runs smoke-scale models end-to-end (examples/
+train_lm.py trains a ~25M-param model for a few hundred steps); on a real
+pod the same driver takes the production mesh (launch/mesh.py) and the
+full configs — nothing here is CPU-specific.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \
+      --steps 50 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import registry
+from repro.data import SyntheticLMPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.optim import AdamWConfig, adamw_init, cosine_schedule
+from repro.optim.compress import compress_grads
+from repro.optim.adamw import adamw_update
+from repro.runtime import StragglerMonitor
+from repro.sharding import MeshAxes, batch_specs, param_specs
+
+
+def make_train_step(cfg, opt_cfg, total_steps, grad_compress=False):
+    def train_step(params, opt_state, err_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.loss_fn, has_aux=True)(params, batch, cfg)
+        if grad_compress:
+            grads, err_state = compress_grads(grads, err_state)
+        lr_scale = cosine_schedule(opt_state["step"],
+                                   warmup=max(total_steps // 50, 1),
+                                   total=total_steps)
+        params, opt_state, om = adamw_update(params, grads, opt_state,
+                                             opt_cfg, lr_scale)
+        return params, opt_state, err_state, {"loss": loss, **metrics, **om}
+    return train_step
+
+
+def train(arch: str, *, smoke: bool = True, steps: int = 100,
+          global_batch: int = 8, seq_len: int = 256,
+          ckpt_dir=None, ckpt_every: int = 50, restore: bool = False,
+          grad_compress: bool = False, lr: float = 3e-4,
+          log_every: int = 10, seed: int = 0, mesh=None):
+    cfg = registry.get_config(arch)
+    if smoke:
+        cfg = registry.reduced(cfg)
+    mesh = mesh or make_host_mesh()
+    axes = MeshAxes.from_mesh(mesh)
+    opt_cfg = AdamWConfig(lr=lr)
+
+    key = jax.random.PRNGKey(seed)
+    params = lm.init_params(key, cfg)
+    opt_state = adamw_init(params, jnp.dtype(cfg.opt_moment_dtype))
+    err_state = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params) if grad_compress else 0
+
+    pipe = SyntheticLMPipeline(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                               global_batch=global_batch, seed=seed,
+                               n_logical_shards=global_batch)
+    ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+    start_step = 0
+    if ckpt and restore:
+        try:
+            (params, opt_state), start_step, extra = ckpt.restore(
+                (params, opt_state))
+            pipe.state.step = int(extra.get("data_step", start_step))
+            print(f"restored checkpoint at step {start_step}")
+        except FileNotFoundError:
+            print("no checkpoint found; starting fresh")
+    pipe.state.step = max(pipe.state.step, start_step)
+    pipe.start_prefetch()
+
+    step_fn = make_train_step(cfg, opt_cfg, steps, grad_compress)
+    with mesh:
+        pspec = param_specs(params, axes)
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+        monitor = StragglerMonitor()
+        losses = []
+        t_start = time.time()
+        for step in range(start_step, steps):
+            batch_np = next(pipe)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            if cfg.family == "vlm":
+                batch["memory"] = jnp.zeros(
+                    (global_batch, cfg.vision_tokens, cfg.d_model), cfg.cdtype)
+            if cfg.encoder is not None:
+                batch["frames"] = jnp.zeros(
+                    (global_batch, cfg.encoder.n_frames, cfg.d_model),
+                    jnp.float32)
+            t0 = time.time()
+            params, opt_state, err_state, metrics = jitted(
+                params, opt_state, err_state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            monitor.report(0, time.time() - t0)
+            if log_every and (step + 1) % log_every == 0:
+                tok_s = global_batch * seq_len * log_every / max(
+                    time.time() - t_start, 1e-9)
+                t_start = time.time()
+                print(f"step {step+1:5d} loss {loss:7.4f} "
+                      f"gnorm {float(metrics['grad_norm']):6.2f} "
+                      f"tok/s {tok_s:9.0f}")
+            if ckpt and (step + 1) % ckpt_every == 0:
+                ckpt.save(step + 1, (params, opt_state),
+                          extra={"data_step": pipe.state.step},
+                          blocking=False)
+        if ckpt:
+            ckpt.save(steps, (params, opt_state),
+                      extra={"data_step": pipe.state.step}, blocking=True)
+    pipe.stop_prefetch()
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(registry.ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--restore", action="store_true")
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+    _, losses = train(args.arch, smoke=args.smoke, steps=args.steps,
+                      global_batch=args.batch, seq_len=args.seq,
+                      ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                      restore=args.restore, grad_compress=args.grad_compress,
+                      lr=args.lr)
+    print(f"final loss: {losses[-1]:.4f} (from {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,322 @@
+"""Attention: GQA with every assigned variant, plus MLA and cross-attention.
+
+Two execution paths for the core softmax(QK^T)V:
+  * dense  — full score matrix; used when the KV length is short or Sq == 1
+             (decode: one query row against the cache is linear, not quadratic).
+  * blockwise — ``lax.scan`` over KV chunks with an online-softmax carry
+             (flash-attention recurrence in pure jnp); memory O(Sq * chunk)
+             instead of O(Sq * Skv). Used for 32k prefill. The Pallas kernel in
+             ``repro.kernels.flash_attention`` is the TPU-optimized twin of
+             this path and is validated against it.
+
+Mask variants: causal, sliding-window (gemma2 local), chunked-local (llama4),
+bidirectional (whisper encoder / cross-attn).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (act_fn, apply_dense, apply_norm, apply_rope,
+                                 init_dense, init_norm, normal_init, softcap,
+                                 split_keys)
+from repro.sharding import act as act_sharding
+
+DENSE_KV_THRESHOLD = 2048   # Skv above this and Sq > 1 -> blockwise path
+KV_BLOCK = 1024
+
+
+# ------------------------------------------------------------------ masks
+def _mask_block(qpos, kpos, kind: str, window: int, chunk: int):
+    """qpos: (Sq,), kpos: (Bk,) -> bool (Sq, Bk), True = attend."""
+    q = qpos[:, None]
+    k = kpos[None, :]
+    if kind == "bidir":
+        return jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    m = k <= q  # causal
+    if kind == "window":
+        m = m & (k > q - window)
+    elif kind == "chunked":
+        m = m & (q // chunk == k // chunk)
+    return m
+
+
+def _gqa_scores(q, k, scale, cap):
+    """q: (B,Sq,K,G,hd) k: (B,Sk,K,hd) -> (B,K,G,Sq,Sk) fp32 math; with the
+    attn_scores_bf16 knob, the MXU emits bf16 (halving the score tensor's
+    HBM traffic — the dominant term of 4k training) and the softmax chain
+    upcasts inside its fusion."""
+    pol = act_sharding.current()
+    bf16_scores = pol is not None and pol.attn_scores_bf16
+    pet = jnp.bfloat16 if bf16_scores else jnp.float32
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=pet)
+    return softcap(s.astype(jnp.float32) * scale, cap)
+
+
+def _attn_dense(q, k, v, qpos, kpos, kind, window, chunk, cap, scale):
+    s = _gqa_scores(q, k, scale, cap)
+    mask = _mask_block(qpos, kpos, kind, window, chunk)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+
+
+def _attn_blockwise(q, k, v, qpos, kpos, kind, window, chunk, cap, scale):
+    """Online-softmax scan over KV blocks."""
+    B, Sq, K, G, hd = q.shape
+    Sk = k.shape[1]
+    hdv = v.shape[-1]                       # may differ from q/k head dim (MLA)
+    nb = -(-Sk // KV_BLOCK)
+    pad = nb * KV_BLOCK - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    kb = k.reshape(B, nb, KV_BLOCK, K, k.shape[-1]).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, KV_BLOCK, K, hdv).transpose(1, 0, 2, 3, 4)
+    kpb = kpos.reshape(nb, KV_BLOCK)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, kp = blk
+        s = _gqa_scores(q, kblk, scale, cap)                 # (B,K,G,Sq,Bk)
+        mask = _mask_block(qpos, kp, kind, window, chunk)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))          # may stay -inf
+        m_safe = jnp.maximum(m_new, -1e30)                   # finite shift
+        alpha = jnp.exp(m - m_safe)                          # -inf-case -> 0
+        p = jnp.exp(s - m_safe[..., None])                   # masked -> 0
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vblk.dtype), vblk)
+        acc_new = acc * alpha[..., None] + pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, hdv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, kpb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)      # (B,Sq,K,G,hd)
+
+
+def mha(q, k, v, *, qpos, kpos, kind="causal", window=4096, chunk=8192,
+        cap=0.0, scale=None):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,K,hd) with H % K == 0. Returns (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = (hd ** -0.5) if scale is None else scale
+    qg = q.reshape(B, Sq, K, G, hd)
+    # Attention activation layout (policy knob `attn_mode`):
+    #   seq   — queries shard (batch->dp, Sq->model); k/v dp-sharded,
+    #           model-replicated (all-gather per layer, no head padding)
+    #   heads — classic Megatron: KV-head axis -> model (pads when K<tp)
+    #   none  — dp only (GSPMD free to choose the rest)
+    # Decode (Sq==1) inherits the cache sharding instead (K/hd/Skv -> model).
+    if Sq > 1:
+        pol = act_sharding.current()
+        mode = pol.attn_mode if pol is not None else "seq"
+        if mode == "heads":
+            qg = act_sharding.constrain(qg, {0: "dp", 2: "tp"})
+            k = act_sharding.constrain(k, {0: "dp", 2: "tp"})
+            v = act_sharding.constrain(v, {0: "dp", 2: "tp"})
+        elif mode == "seq":
+            qg = act_sharding.constrain(qg, {0: "dp", 1: "tp"})
+            k = act_sharding.constrain(k, {0: "dp"})
+            v = act_sharding.constrain(v, {0: "dp"})
+        else:
+            qg = act_sharding.constrain(qg, {0: "dp"})
+    if Sq == 1 or k.shape[1] <= DENSE_KV_THRESHOLD:
+        out = _attn_dense(qg, k, v, qpos, kpos, kind, window, chunk, cap, scale)
+    else:
+        blockwise = _attn_blockwise
+        pol = act_sharding.current()
+        if pol is not None and pol.attn_remat:
+            # flash-backward semantics: recompute probabilities in the
+            # backward pass instead of materializing per-block p/alpha
+            blockwise = jax.checkpoint(
+                _attn_blockwise, static_argnums=(5, 6, 7, 8, 9))
+        out = blockwise(qg, k, v, qpos, kpos, kind, window, chunk, cap, scale)
+    return out.reshape(B, Sq, H, v.shape[-1])   # v head dim may differ (MLA)
+
+
+# ------------------------------------------------------------------ GQA module
+def init_attention(key, cfg, spec):
+    ks = split_keys(key, 8)
+    H, K, hd, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_model
+    p = {}
+    p.update(init_dense(ks[0], D, H * hd, cfg.pdtype, bias=cfg.qkv_bias, name="wq"))
+    kv_dim = D if spec.mixer != "cross_attn" else D
+    p.update(init_dense(ks[1], kv_dim, K * hd, cfg.pdtype, bias=cfg.qkv_bias, name="wk"))
+    p.update(init_dense(ks[2], kv_dim, K * hd, cfg.pdtype, bias=cfg.qkv_bias, name="wv"))
+    p.update(init_dense(ks[3], H * hd, D, cfg.pdtype, name="wo"))
+    if cfg.qk_norm:
+        p["qnorm"] = init_norm((hd,), "rmsnorm", cfg.pdtype)
+        p["knorm"] = init_norm((hd,), "rmsnorm", cfg.pdtype)
+    if spec.mixer == "cross_attn" and cfg.family == "vlm":
+        p["xgate"] = jnp.zeros((), cfg.pdtype)   # tanh-gated cross-attn (llama-vision)
+    return p
+
+
+def _project_kv(p, src, cfg):
+    B, S = src.shape[:2]
+    K, hd = cfg.n_kv_heads, cfg.hd
+    k = apply_dense(p, src, "wk", cfg.cdtype).reshape(B, S, K, hd)
+    v = apply_dense(p, src, "wv", cfg.cdtype).reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        k = apply_norm(p["knorm"], k, "rmsnorm")
+    return k, v
+
+
+def apply_attention(p, x, cfg, spec, *, positions, cache=None, memory=None):
+    """Self/cross attention.
+
+    cache: None (train/prefill, returns new kv for caching) or dict with
+      {"k": (B,Smax,K,hd), "v": ..., "pos": scalar index} for decode.
+    memory: (B,M,D) for cross_attn.
+    Returns (out, new_cache_entry).
+    """
+    B, Sq, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = apply_dense(p, x, "wq", cfg.cdtype).reshape(B, Sq, H, hd)
+    if cfg.qk_norm:
+        q = apply_norm(p["qnorm"], q, "rmsnorm")
+
+    kind = {"attn": "causal", "attn_local": "window", "attn_chunked": "chunked",
+            "attn_nope": "causal", "cross_attn": "bidir", "attn_bidir": "bidir"}[spec.mixer]
+    use_rope = cfg.use_rope and spec.mixer in ("attn", "attn_local", "attn_chunked")
+
+    if spec.mixer == "cross_attn":
+        if memory is not None:                        # prefill/train: project now
+            k, v = _project_kv(p, memory, cfg)
+        else:                                         # decode: pre-projected in cache
+            k, v = cache["ck"].astype(q.dtype), cache["cv"].astype(q.dtype)
+        kpos = jnp.arange(k.shape[1], dtype=jnp.int32)
+        new_entry = ({"ck": k, "cv": v} if cache is not None else {})
+        out = mha(q, k, v, qpos=positions, kpos=kpos, kind="bidir",
+                  cap=cfg.attn_logit_softcap)
+        if "xgate" in p:
+            out = jnp.tanh(p["xgate"].astype(jnp.float32)).astype(out.dtype) * out
+    else:
+        k, v = _project_kv(p, x, cfg)
+        if use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        if cache is not None:                          # decode: append to cache
+            idx = cache["pos"]
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+            new_entry = {"k": ck, "v": cv, "pos": idx + Sq}
+            kpos = jnp.arange(ck.shape[1], dtype=jnp.int32)
+            # positions beyond the write head must be masked out
+            kpos = jnp.where(kpos < idx + Sq, kpos, jnp.iinfo(jnp.int32).max - 1)
+            k, v = ck.astype(q.dtype), cv.astype(q.dtype)
+        else:
+            new_entry = {"k": k, "v": v}
+            kpos = positions
+        out = mha(q, k, v, qpos=positions, kpos=kpos, kind=kind,
+                  window=cfg.window, chunk=cfg.chunk, cap=cfg.attn_logit_softcap)
+
+    out = out.reshape(B, Sq, H * hd)
+    return apply_dense(p, out, "wo", cfg.cdtype), new_entry
+
+
+# ------------------------------------------------------------------ MLA
+def init_mla(key, cfg):
+    m = cfg.mla
+    ks = split_keys(key, 8)
+    D, H = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    p = {}
+    p.update(init_dense(ks[0], D, m.q_lora_rank, cfg.pdtype, name="wq_a"))
+    p["q_a_norm"] = init_norm((m.q_lora_rank,), "rmsnorm", cfg.pdtype)
+    p.update(init_dense(ks[1], m.q_lora_rank, H * qk_dim, cfg.pdtype, name="wq_b"))
+    p.update(init_dense(ks[2], D, m.kv_lora_rank + m.qk_rope_head_dim, cfg.pdtype, name="wkv_a"))
+    p["kv_a_norm"] = init_norm((m.kv_lora_rank,), "rmsnorm", cfg.pdtype)
+    p.update(init_dense(ks[3], m.kv_lora_rank, H * (m.qk_nope_head_dim + m.v_head_dim),
+                        cfg.pdtype, name="wkv_b"))
+    p.update(init_dense(ks[4], H * m.v_head_dim, D, cfg.pdtype, name="wo"))
+    return p
+
+
+def apply_mla(p, x, cfg, *, positions, cache=None):
+    """Multi-head latent attention. The *latent* (kv_lora + rope-k) is what we
+    cache at decode — the paper-accurate memory saving of MLA."""
+    m = cfg.mla
+    B, Sq, D = x.shape
+    H = cfg.n_heads
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    qa = apply_dense(p, x, "wq_a", cfg.cdtype)
+    qa = apply_norm(p["q_a_norm"], qa, "rmsnorm")
+    q = apply_dense(p, qa, "wq_b", cfg.cdtype).reshape(B, Sq, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = apply_dense(p, x, "wkv_a", cfg.cdtype)
+    c_kv, k_rope = kv_a[..., :m.kv_lora_rank], kv_a[..., m.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    pol_ = act_sharding.current()
+    if cache is not None:
+        idx = cache["pos"]
+        c_all = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], c_kv.astype(cache["ckv"].dtype), idx, axis=1)
+        kr_all = jax.lax.dynamic_update_slice_in_dim(cache["krope"], k_rope.astype(cache["krope"].dtype), idx, axis=1)
+        new_entry = {"ckv": c_all, "krope": kr_all, "pos": idx + Sq}
+        if Sq == 1 and pol_ is not None and pol_.mla_absorb:
+            return _mla_absorbed_decode(p, m, q_nope, q_rope, c_all, kr_all,
+                                        idx, cfg), new_entry
+        kpos = jnp.arange(c_all.shape[1], dtype=jnp.int32)
+        kpos = jnp.where(kpos < idx + Sq, kpos, jnp.iinfo(jnp.int32).max - 1)
+        c_kv, k_rope = c_all.astype(x.dtype), kr_all.astype(x.dtype)
+    else:
+        new_entry = {"ckv": c_kv, "krope": k_rope}
+        kpos = positions
+
+    c_kv = apply_norm(p["kv_a_norm"], c_kv, "rmsnorm")
+    kv = apply_dense(p, c_kv, "wkv_b", cfg.cdtype)
+    Sk = kv.shape[1]
+    kv = kv.reshape(B, Sk, H, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, Sk, H, rope_d))], axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    out = mha(qfull, k, v, qpos=positions, kpos=kpos, kind="causal",
+              scale=(nope + rope_d) ** -0.5)
+    out = out.reshape(B, Sq, H * vd)
+    return apply_dense(p, out, "wo", cfg.cdtype), new_entry
+
+
+def _mla_absorbed_decode(p, m, q_nope, q_rope, c_all, kr_all, idx, cfg):
+    """MLA decode with absorbed projections (beyond-paper §Perf lever).
+
+    The naive decode path re-expands the whole latent cache through wkv_b
+    every step — O(S * r * H * (nope+v)) FLOPs per token per layer. Scoring
+    against the LATENT instead (fold wkv_b's key half into the query, its
+    value half into the output) costs O(S * H * r): ~30x fewer FLOPs at
+    minicpm3 dims, and the (B,S,H,nope+v) expanded cache never exists.
+    """
+    mm = cfg.mla
+    B, _, H, nope = q_nope.shape
+    r = mm.kv_lora_rank
+    vd = mm.v_head_dim
+    wkv_b = p["wkv_b"].astype(cfg.cdtype).reshape(r, H, nope + vd)
+    wk = wkv_b[..., :nope]                              # (r, H, nope)
+    wv = wkv_b[..., nope:]                              # (r, H, vd)
+    c_n = apply_norm(p["kv_a_norm"], c_all.astype(cfg.cdtype), "rmsnorm")
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                       wk.astype(jnp.float32))          # absorb k-half
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_lat, c_n.astype(jnp.float32))
+         + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                      kr_all.astype(jnp.float32)))
+    s = s * ((nope + mm.qk_rope_head_dim) ** -0.5)
+    S = c_all.shape[1]
+    valid = jnp.arange(S, dtype=jnp.int32) < (idx + 1)
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", pr, c_n.astype(jnp.float32))
+    out = jnp.einsum("bqhr,rhv->bqhv", ctx, wv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * vd).astype(cfg.cdtype)
+    return apply_dense(p, out, "wo", cfg.cdtype)

@@ -1,0 +1,141 @@
+"""Layer / superblock composition.
+
+A *superblock* is one repetition of ``cfg.block_pattern``; the whole stack is
+``lax.scan`` over ``n_superblocks`` stacked superblock params, so HLO size is
+O(|pattern|) regardless of depth. Heterogeneous stacks (gemma2 local/global,
+llama4 3-local+1-global, jamba 7-mamba+1-attn, vision cross-attn every 5th,
+MoE every other layer) are all just patterns.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.common import apply_norm, init_norm, split_keys
+
+ATTN_MIXERS = ("attn", "attn_local", "attn_chunked", "attn_nope", "attn_bidir")
+
+
+def _residual_scale(cfg):
+    if cfg.scale_depth:
+        return cfg.scale_depth / (cfg.n_layers ** 0.5)
+    return 1.0
+
+
+# ------------------------------------------------------------------ one layer
+def init_layer(key, cfg, spec):
+    ks = split_keys(key, 4)
+    p = {"norm1": init_norm((cfg.d_model,), cfg.norm, cfg.pdtype)}
+    if spec.ffn != "none":
+        p["norm2"] = init_norm((cfg.d_model,), cfg.norm, cfg.pdtype)
+    if cfg.name.startswith("gemma"):   # sandwich norms (pre+post)
+        p["postnorm1"] = init_norm((cfg.d_model,), cfg.norm, cfg.pdtype)
+        p["postnorm2"] = init_norm((cfg.d_model,), cfg.norm, cfg.pdtype)
+    if spec.mixer == "mamba":
+        p["mixer"] = mamba_mod.init_mamba(ks[0], cfg)
+    elif cfg.mla is not None and spec.mixer != "cross_attn":
+        p["mixer"] = attn_mod.init_mla(ks[0], cfg)
+    else:
+        p["mixer"] = attn_mod.init_attention(ks[0], cfg, spec)
+    if spec.ffn == "mlp":
+        p["ffn"] = moe_mod.init_mlp(ks[1], cfg)
+    elif spec.ffn == "moe":
+        p["ffn"] = moe_mod.init_moe(ks[1], cfg)
+    return p
+
+
+def apply_layer(p, x, cfg, spec, *, positions, cache=None, memory=None):
+    """Returns (x, new_cache_entry, aux)."""
+    rs = _residual_scale(cfg)
+    unit = cfg.name.startswith("gemma")
+    h = apply_norm(p["norm1"], x, cfg.norm, unit_offset=unit)
+
+    if spec.mixer == "mamba":
+        mix, new_entry = mamba_mod.apply_mamba(p["mixer"], h, cfg, cache=cache)
+    elif cfg.mla is not None and spec.mixer != "cross_attn":
+        mix, new_entry = attn_mod.apply_mla(p["mixer"], h, cfg, positions=positions, cache=cache)
+    else:
+        # attn_nope: RoPE suppression handled inside apply_attention via spec
+        mix, new_entry = attn_mod.apply_attention(
+            p["mixer"], h, cfg, spec, positions=positions, cache=cache,
+            memory=memory)
+    if "postnorm1" in p:
+        mix = apply_norm(p["postnorm1"], mix, cfg.norm, unit_offset=unit)
+    x = x + rs * mix
+
+    aux = {}
+    if spec.ffn != "none":
+        h2 = apply_norm(p["norm2"], x, cfg.norm, unit_offset=unit)
+        if spec.ffn == "moe":
+            f, aux = moe_mod.apply_moe(p["ffn"], h2, cfg)
+        else:
+            f = moe_mod.apply_mlp(p["ffn"], h2, cfg)
+        if "postnorm2" in p:
+            f = apply_norm(p["postnorm2"], f, cfg.norm, unit_offset=unit)
+        x = x + rs * f
+    return x, new_entry, aux
+
+
+# ------------------------------------------------------------------ superblock
+def init_superblock(key, cfg):
+    ks = split_keys(key, len(cfg.block_pattern))
+    return {f"layer{i}": init_layer(ks[i], cfg, spec)
+            for i, spec in enumerate(cfg.block_pattern)}
+
+
+def apply_superblock(p, x, cfg, *, positions, cache=None, memory=None):
+    """cache: None or dict {"layer{i}": entry}. Returns (x, new_cache, aux_sum)."""
+    new_cache = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, spec in enumerate(cfg.block_pattern):
+        entry = cache[f"layer{i}"] if cache is not None else None
+        x, new_entry, aux = apply_layer(
+            p[f"layer{i}"], x, cfg, spec, positions=positions,
+            cache=entry, memory=memory)
+        new_cache[f"layer{i}"] = new_entry
+        for v in aux.values():
+            aux_total = aux_total + v
+    return x, new_cache, aux_total
+
+
+# ------------------------------------------------------------------ stack scan
+def init_stack(key, cfg):
+    ks = jax.random.split(key, cfg.n_superblocks)
+    return jax.vmap(lambda k: init_superblock(k, cfg))(ks)
+
+
+def apply_stack(params, x, cfg, *, positions, cache=None, memory=None,
+                remat: bool = True, collect_cache: bool = False,
+                remat_policy=None):
+    """Scan over stacked superblocks. cache is a pytree stacked on axis 0.
+    collect_cache=False drops per-layer KV outputs (train fwd must not
+    materialize a cache). Returns (x, new_cache_or_None, aux_sum)."""
+
+    def body(carry, scanned):
+        h, aux = carry
+        sb_params, sb_cache = scanned
+        h, new_cache, a = apply_superblock(
+            sb_params, h, cfg, positions=positions, cache=sb_cache,
+            memory=memory)
+        return (h, aux + a), (new_cache if collect_cache else None)
+
+    from repro.sharding import act as act_sharding
+    pol = act_sharding.current()
+    mode = pol.remat if pol is not None else ("full" if remat else "none")
+    if not remat:
+        mode = "none"
+    if mode == "none":
+        fn = body
+    else:
+        policy = remat_policy or (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if mode == "dots" else jax.checkpoint_policies.nothing_saveable)
+        fn = jax.checkpoint(body, policy=policy)
+    (x, aux), new_cache = jax.lax.scan(
+        fn, (x, jnp.zeros((), jnp.float32)), (params, cache))
+    return x, new_cache, aux

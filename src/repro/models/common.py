@@ -1,0 +1,94 @@
+"""Shared model primitives: norms, RoPE, activations, initializers.
+
+Pure-functional: every module is an ``init_*(key, ...) -> params`` plus an
+``apply`` that takes the params dict. Norm math runs in fp32 regardless of
+compute dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, dtype, stddev=0.02):
+    return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------- norms
+def init_norm(shape, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones(shape, dtype)}
+    elif kind == "layernorm":
+        return {"scale": jnp.ones(shape, dtype), "bias": jnp.zeros(shape, dtype)}
+    raise ValueError(kind)
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-6, unit_offset: bool = False):
+    """unit_offset: gemma-style (1 + scale) parameterization."""
+    xf = x.astype(jnp.float32)
+    scale = params["scale"].astype(jnp.float32)
+    if unit_offset:
+        scale = scale + 1.0
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * scale
+    elif kind == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + eps) * scale + params["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(kind)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rope
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd) rotated pairwise-half style; positions: (S,) or (B,S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    # broadcast over head axis: (..., S, 1, hd/2)
+    angles = angles[..., None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- activations
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def softcap(x, cap: float):
+    """Gemma-2 logit soft-capping; cap <= 0 disables."""
+    if cap and cap > 0:
+        return cap * jnp.tanh(x / cap)
+    return x
+
+
+# ---------------------------------------------------------------- dense
+def init_dense(key, d_in, d_out, dtype, bias=False, stddev=0.02, name="w"):
+    p = {name: normal_init(key, (d_in, d_out), dtype, stddev)}
+    if bias:
+        p[name + "_bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def apply_dense(p, x, name="w", cdtype=None):
+    w = p[name]
+    if cdtype is not None:
+        w = w.astype(cdtype)
+        x = x.astype(cdtype)
+    y = x @ w
+    if name + "_bias" in p:
+        y = y + p[name + "_bias"].astype(y.dtype)
+    return y

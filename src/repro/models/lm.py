@@ -1,0 +1,216 @@
+"""Top-level language models: embedding -> superblock stack -> head.
+
+Covers every assigned family behind one functional API:
+
+  init_params(key, cfg)                  -> params pytree
+  forward(params, tokens, cfg, ...)      -> (logits, new_cache, aux)
+  loss_fn(params, batch, cfg)            -> (scalar, metrics)
+  init_cache(cfg, batch, max_len)        -> decode cache pytree (stacked per
+                                            superblock, scanned by the stack)
+  prefill(params, tokens, cfg, max_len)  -> (logits_last, cache)
+  decode_step(params, token, cache, cfg) -> (logits, new_cache)
+
+Enc-dec (whisper): `encode(params, frames, cfg)` produces the encoder memory;
+decoder cross-attn layers consume it (the mel/conv frontend is a stub —
+`frames` are precomputed frame embeddings per the assignment).
+VLM (llama-3.2-vision): cross-attn layers consume precomputed patch
+embeddings passed as `memory` (vision tower stubbed the same way).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.common import (apply_norm, init_norm, normal_init,
+                                 softcap, split_keys)
+from repro.sharding import act as act_sharding
+
+
+# ------------------------------------------------------------------ init
+def init_params(key, cfg):
+    ks = split_keys(key, 6)
+    p = {
+        "embed": normal_init(ks[0], (cfg.vocab_size, cfg.d_model), cfg.pdtype),
+        "stack": blocks.init_stack(ks[1], cfg),
+        "final_norm": init_norm((cfg.d_model,), cfg.norm, cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = normal_init(ks[2], (cfg.d_model, cfg.vocab_size), cfg.pdtype)
+    if cfg.learned_pos_emb:
+        p["pos_embed"] = normal_init(ks[3], (cfg.max_decoder_len, cfg.d_model), cfg.pdtype)
+    if cfg.encoder is not None:
+        enc_cfg = cfg.encoder_cfg()
+        p["encoder"] = {
+            "stack": blocks.init_stack(ks[4], enc_cfg),
+            "final_norm": init_norm((cfg.d_model,), cfg.norm, cfg.pdtype),
+            "pos_embed": normal_init(ks[5], (cfg.encoder.n_frames, cfg.d_model), cfg.pdtype),
+        }
+    return p
+
+
+# ------------------------------------------------------------------ encoder
+def encode(params, frames, cfg):
+    """frames: (B, n_frames, d_model) precomputed frame/patch embeddings (stub
+    frontend). Returns encoder memory (B, n_frames, d_model)."""
+    enc_cfg = cfg.encoder_cfg()
+    ep = params["encoder"]
+    x = frames.astype(cfg.cdtype) + ep["pos_embed"].astype(cfg.cdtype)[None]
+    pos = jnp.arange(frames.shape[1], dtype=jnp.int32)
+    x, _, _ = blocks.apply_stack(ep["stack"], x, enc_cfg, positions=pos)
+    return apply_norm(ep["final_norm"], x, cfg.norm)
+
+
+# ------------------------------------------------------------------ forward
+def _embed(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+    if cfg.scale_emb != 1.0:
+        x = x * jnp.asarray(cfg.scale_emb, cfg.cdtype)
+    return act_sharding.constrain(x, {0: "dp"})
+
+
+def _head(params, x, cfg):
+    xn = apply_norm(params["final_norm"], x, cfg.norm,
+                    unit_offset=cfg.name.startswith("gemma"))
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(cfg.cdtype)
+    logits = xn.astype(cfg.cdtype) @ w
+    logits = act_sharding.constrain(logits, {0: "dp", 2: "tp"})
+    return softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+
+
+def forward(params, tokens, cfg, *, positions=None, cache=None, memory=None,
+            collect_cache=False, remat=True, head="full"):
+    """tokens: (B, S) int32. memory: (B, M, D) for cross-attn archs.
+    head: "full" -> logits (B,S,V); "last" -> (B,1,V); "none" -> hidden.
+    Returns (logits_or_hidden fp32, new_cache_or_None, aux scalar)."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    x = _embed(params, tokens, cfg)
+    if cfg.learned_pos_emb:
+        x = x + jnp.take(params["pos_embed"], positions, axis=0).astype(cfg.cdtype)
+    x, new_cache, aux = blocks.apply_stack(
+        params["stack"], x, cfg, positions=positions, cache=cache,
+        memory=memory, remat=remat, collect_cache=collect_cache)
+    if head == "none":
+        return x, new_cache, aux
+    if head == "last":
+        x = x[:, -1:]
+    return _head(params, x, cfg), new_cache, aux
+
+
+# ------------------------------------------------------------------ loss
+CE_CHUNK = 65536    # tokens per CE chunk: logits are never materialized for
+                    # more than this many rows (chunked cross-entropy)
+
+
+def _ce_chunked(params, x, targets, mask, cfg):
+    """x: (B,S,D) hidden; targets/mask: (B,S). Computes sum-NLL/sum-mask with
+    a remat'd lax.scan over token chunks so the (T, V) logits never exist."""
+    B, S, D = x.shape
+    xn = apply_norm(params["final_norm"], x, cfg.norm,
+                    unit_offset=cfg.name.startswith("gemma"))
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(cfg.cdtype)
+    T = B * S
+    xt = xn.reshape(T, D).astype(cfg.cdtype)
+    tt = targets.reshape(T)
+    mt = mask.reshape(T).astype(jnp.float32)
+    pol = act_sharding.current()
+    chunk = (pol.ce_chunk if pol is not None and pol.ce_chunk else CE_CHUNK)
+    C = min(chunk, T)
+    pad = (-T) % C
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+        tt = jnp.pad(tt, (0, pad))
+        mt = jnp.pad(mt, (0, pad))
+    n = (T + pad) // C
+    xc = xt.reshape(n, C, D)
+    tc = tt.reshape(n, C)
+    mc = mt.reshape(n, C)
+
+    def body(carry, blk):
+        xb, tb, mb = blk
+        xb = act_sharding.constrain(xb, {0: "dp"})
+        lg = xb @ w
+        lg = act_sharding.constrain(lg, {0: "dp", 1: "tp"})
+        lg = softcap(lg.astype(jnp.float32), cfg.final_logit_softcap)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tb[:, None], axis=-1)[:, 0]
+        s, m = carry
+        return (s + jnp.sum((lse - gold) * mb), m + jnp.sum(mb)), None
+
+    (tot, cnt), _ = jax.lax.scan(jax.checkpoint(body),
+                                 (jnp.zeros((), jnp.float32),
+                                  jnp.zeros((), jnp.float32)), (xc, tc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, batch, cfg, *, remat=True):
+    """batch: {"tokens": (B,S), "loss_mask": (B,S) optional, "memory": opt}.
+    Next-token CE in fp32; chunked so full logits are never materialized."""
+    tokens = batch["tokens"]
+    memory = batch.get("memory")
+    if cfg.encoder is not None:
+        memory = encode(params, batch["frames"], cfg)
+    x, _, aux = forward(params, tokens, cfg, memory=memory, remat=remat,
+                        head="none")
+    mask = batch.get("loss_mask")
+    mask = (jnp.ones_like(tokens) if mask is None else mask)[:, 1:]
+    loss = _ce_chunked(params, x[:, :-1], tokens[:, 1:], mask, cfg)
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+# ------------------------------------------------------------------ caches
+def _layer_cache(cfg, spec, B, max_len, dtype):
+    K, hd = cfg.n_kv_heads, cfg.hd
+    if spec.mixer == "mamba":
+        s = cfg.ssm
+        return {"conv": jnp.zeros((B, s.d_conv - 1, cfg.d_inner), dtype),
+                "ssm": jnp.zeros((B, cfg.d_inner, s.d_state), jnp.float32)}
+    if spec.mixer == "cross_attn":
+        M = cfg.memory_len()
+        return {"ck": jnp.zeros((B, M, K, hd), dtype),
+                "cv": jnp.zeros((B, M, K, hd), dtype)}
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {"ckv": jnp.zeros((B, max_len, m.kv_lora_rank), dtype),
+                "krope": jnp.zeros((B, max_len, m.qk_rope_head_dim), dtype),
+                "pos": jnp.zeros((), jnp.int32)}
+    # sliding-window layers only ever read the trailing `window` positions but
+    # we keep the full ring for simplicity of positions bookkeeping.
+    return {"k": jnp.zeros((B, max_len, K, hd), dtype),
+            "v": jnp.zeros((B, max_len, K, hd), dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def init_cache(cfg, B, max_len, dtype=None):
+    """Decode cache pytree stacked on a leading superblock axis (scanned)."""
+    dtype = dtype or cfg.cdtype
+    one = {f"layer{i}": _layer_cache(cfg, spec, B, max_len, dtype)
+           for i, spec in enumerate(cfg.block_pattern)}
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_superblocks,) + x.shape), one)
+
+
+def prefill(params, tokens, cfg, max_len, *, memory=None):
+    """Run the full prompt, materializing a decode-ready cache of size
+    max_len. Returns (logits_last (B,V), cache)."""
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len)
+    # seed 'pos'=0 cache entries; forward in cached mode appends at pos.
+    logits, new_cache, _ = forward(params, tokens, cfg, cache=cache,
+                                   memory=memory, collect_cache=True,
+                                   remat=False, head="last")
+    return logits[:, -1], new_cache
+
+
+def decode_step(params, token, cache, cfg, pos, *, memory=None):
+    """token: (B, 1) int32; pos: scalar int32 (current write index).
+    Returns (logits (B, V), new_cache)."""
+    positions = jnp.asarray([pos], jnp.int32)
+    logits, new_cache, _ = forward(params, token, cfg, positions=positions,
+                                   cache=cache, memory=memory,
+                                   collect_cache=True, remat=False)
+    return logits[:, 0], new_cache

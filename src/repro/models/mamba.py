@@ -1,0 +1,136 @@
+"""Mamba-1 selective-SSM block (falcon-mamba / jamba mixer).
+
+Train/prefill path uses a *chunked associative scan*: the sequence is cut
+into chunks of ``SCAN_CHUNK``; inside a chunk the linear recurrence
+``h_t = a_t * h_{t-1} + b_t`` runs as ``lax.associative_scan`` (log-depth,
+VPU-parallel on TPU), and the carry crosses chunk boundaries through a
+``lax.scan``. This bounds live memory to O(B * chunk * d_inner * d_state)
+instead of O(B * S * d_inner * d_state). The Pallas kernel in
+``repro.kernels.mamba_scan`` implements the same chunking with explicit VMEM
+tiles and is validated against ``selective_scan_ref``.
+
+Decode path is the O(1) recurrent update on (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_dense, init_dense, normal_init, split_keys
+
+SCAN_CHUNK = 256
+
+
+def init_mamba(key, cfg):
+    s = cfg.ssm
+    ks = split_keys(key, 8)
+    D, di, N, R = cfg.d_model, cfg.d_inner, s.d_state, cfg.dt_rank
+    p = {}
+    p.update(init_dense(ks[0], D, 2 * di, cfg.pdtype, name="mamba_in"))
+    p["mamba_conv_w"] = normal_init(ks[1], (s.d_conv, di), cfg.pdtype, stddev=0.1)
+    p["mamba_conv_b"] = jnp.zeros((di,), cfg.pdtype)
+    p.update(init_dense(ks[2], di, R + 2 * N, cfg.pdtype, name="mamba_xproj"))
+    p.update(init_dense(ks[3], R, di, cfg.pdtype, bias=True, name="mamba_dtproj"))
+    # S4D-real init for A: A_log = log(1..N) rows broadcast over d_inner
+    p["mamba_A_log"] = jnp.broadcast_to(
+        jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)), (di, N)).astype(jnp.float32)
+    p["mamba_D"] = jnp.ones((di,), jnp.float32)
+    p.update(init_dense(ks[4], di, D, cfg.pdtype, name="mamba_out"))
+    return p
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B,S,di), w: (W,di). state: (B,W-1,di) or None.
+    Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):, :] if W > 1 else None
+    return y + b, new_state
+
+
+def _ssm_params(p, x_act, cfg):
+    """x_act: (B,S,di) -> dt (B,S,di), B_ssm/C_ssm (B,S,N), A (di,N) fp32."""
+    s = cfg.ssm
+    N, R = s.d_state, cfg.dt_rank
+    proj = apply_dense(p, x_act, "mamba_xproj", cfg.cdtype)
+    dt_in, Bs, Cs = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        apply_dense(p, dt_in, "mamba_dtproj", cfg.cdtype).astype(jnp.float32))
+    A = -jnp.exp(p["mamba_A_log"])
+    return dt, Bs.astype(jnp.float32), Cs.astype(jnp.float32), A
+
+
+def selective_scan(x, dt, A, Bs, Cs, D_skip, h0=None, chunk=SCAN_CHUNK):
+    """The selective-scan core. x/dt: (B,S,di), Bs/Cs: (B,S,N), A: (di,N).
+    Returns (y (B,S,di), h_last (B,di,N)). All fp32 math."""
+    B, S, di = x.shape
+    N = A.shape[1]
+    x = x.astype(jnp.float32)
+    nch = -(-S // chunk)
+    pad = nch * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bs = jnp.pad(Bs, ((0, 0), (0, pad), (0, 0)))
+        Cs = jnp.pad(Cs, ((0, 0), (0, pad), (0, 0)))
+    xc = x.reshape(B, nch, chunk, di).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(B, nch, chunk, di).transpose(1, 0, 2, 3)
+    Bc = Bs.reshape(B, nch, chunk, N).transpose(1, 0, 2, 3)
+    Cc = Cs.reshape(B, nch, chunk, N).transpose(1, 0, 2, 3)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def chunk_step(h, blk):
+        xb, dtb, Bb, Cb = blk                               # (B,c,di) / (B,c,N)
+        a = jnp.exp(dtb[..., None] * A)                     # (B,c,di,N)
+        b = (dtb * xb)[..., None] * Bb[:, :, None, :]       # (B,c,di,N)
+        a_cum, h_all = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_all = h_all + a_cum * h[:, None]                  # inject carry
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, Cb)
+        return h_all[:, -1], y
+
+    h = jnp.zeros((B, di, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    h, yc = jax.lax.scan(chunk_step, h, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3).reshape(B, nch * chunk, di)[:, :S]
+    return y + x[:, :S] * D_skip, h
+
+
+def apply_mamba(p, x, cfg, *, cache=None):
+    """x: (B,S,D). cache: None or {"conv": (B,W-1,di), "ssm": (B,di,N)}.
+    Returns (out, new_cache_entry)."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    xz = apply_dense(p, x, "mamba_in", cfg.cdtype)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xconv, new_conv = _causal_conv(xin, p["mamba_conv_w"].astype(cfg.cdtype),
+                                   p["mamba_conv_b"].astype(cfg.cdtype), conv_state)
+    xact = jax.nn.silu(xconv)
+    dt, Bs, Cs, A = _ssm_params(p, xact, cfg)
+
+    if cache is not None and S == 1:
+        # O(1) recurrent decode step
+        h = cache["ssm"].astype(jnp.float32)                  # (B,di,N)
+        a = jnp.exp(dt[:, 0, :, None] * A)                    # (B,di,N)
+        b = (dt[:, 0] * xact[:, 0].astype(jnp.float32))[..., None] * Bs[:, 0, None, :]
+        h = a * h + b
+        y = jnp.einsum("bdn,bn->bd", h, Cs[:, 0])[:, None, :]
+        y = y + xact.astype(jnp.float32) * p["mamba_D"]
+        new_entry = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": h}
+    else:
+        h0 = cache["ssm"] if cache is not None else None
+        y, h = selective_scan(xact, dt, A, Bs, Cs, p["mamba_D"], h0=h0)
+        if cache is not None:
+            new_entry = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": h}
+        else:
+            new_entry = {"conv": new_conv, "ssm": h}
+
+    y = (y.astype(cfg.cdtype) * jax.nn.silu(z))
+    return apply_dense(p, y, "mamba_out", cfg.cdtype), new_entry

@@ -1,0 +1,62 @@
+"""int8 gradient compression with error feedback (distributed-optimization
+trick; optional transform around the data-parallel gradient reduction).
+
+Under GSPMD the gradient all-reduce is implicit, so compression is applied
+as quantize -> dequantize around the point where XLA inserts the reduce:
+wrapping the per-shard gradients in shard_map with an explicit psum over
+the int8 payload (int32 accumulator) makes the wire format real — the
+dry-run's collective-bytes term drops ~4x on the gradient reduction,
+which is how EXPERIMENTS.md §Perf measures the win.
+
+Error feedback (Seide et al.): the quantization residual is carried to the
+next step so compression noise is a moving average, not a bias.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, error_state=None):
+    """Quantize every gradient leaf with error feedback.
+    Returns (dequantized_grads, new_error_state)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    if error_state is None:
+        errs = [jnp.zeros_like(l, jnp.float32) for l in leaves]
+    else:
+        errs = treedef.flatten_up_to(error_state)
+    outs, new_errs = [], []
+    for g, e in zip(leaves, errs):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        dq = dequantize_int8(q, s)
+        outs.append(dq.astype(g.dtype))
+        new_errs.append(g32 - dq)
+    return treedef.unflatten(outs), treedef.unflatten(new_errs)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Explicit compressed all-reduce for shard_map code paths: int8 wire
+    payload, int32 accumulation, fp32 result. The scale is itself psum'd
+    (max) so dequantization is consistent across shards."""
+    q, s = quantize_int8(x.astype(jnp.float32))
+    s_max = jax.lax.pmax(s, axis_name)
+    # requantize against the GLOBAL scale so the sum is exact in int32
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s_max), -127, 127
+                 ).astype(jnp.int8)
+    tot = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return tot.astype(jnp.float32) * s_max

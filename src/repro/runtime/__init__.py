@@ -1,0 +1,1 @@
+from repro.runtime.elastic import ElasticPlanner, StragglerMonitor

@@ -1,0 +1,4 @@
+from repro.sharding.rules import (batch_specs, cache_specs, param_specs,
+                                  MeshAxes)
+
+__all__ = ["batch_specs", "cache_specs", "param_specs", "MeshAxes"]

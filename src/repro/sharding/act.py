@@ -1,0 +1,85 @@
+"""Activation-sharding policy: explicit with_sharding_constraint hooks.
+
+GSPMD propagation alone picks bad layouts for some of our graphs (e.g. it
+re-sharded 4k x 4k attention scores onto the 6-way head axis of
+whisper-tiny, replicating the batch and blowing per-device temp to 210 GB).
+The model code therefore calls ``constrain(x, {dim: role})`` at a few key
+points; the active :class:`ActivationPolicy` maps roles to mesh axes with
+divisibility checks. When no policy is set (CPU smoke tests) every call is
+a no-op, keeping model code mesh-free.
+
+Roles:
+  "dp"  — batch-like dim  -> (pod, data) axes
+  "tp"  — model-parallel dim (sequence, heads, vocab, experts, d_ff) -> model
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationPolicy:
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    dp_size: int = 1
+    tp_size: int = 1
+    # ---- layout knobs (Plane B / §Perf hillclimb levers) ----
+    attn_mode: str = "seq"        # seq | heads | none: which dim of q gets TP
+    ce_chunk: Optional[int] = None   # override lm.CE_CHUNK
+    remat: str = "full"           # full (nothing_saveable) | dots | none
+    attn_remat: bool = False      # recompute attention probs in backward
+                                  # (flash-bwd semantics: save only m/l/out)
+    mla_absorb: bool = False      # MLA decode: score against the latent
+                                  # (absorbed wkv_b), skip cache re-expansion
+    attn_scores_bf16: bool = False  # store score/prob tensors in bf16 at
+                                    # HBM fusion boundaries (f32 softmax math)
+    moe_dispatch: str = "global"  # global | local | shard_map:
+                                  #  local = per-block capacity slices
+                                  #  shard_map = explicit per-shard dispatch
+                                  #    + combine-psum (see models/moe.py)
+    mesh: object = None           # concrete Mesh for shard_map dispatch
+
+    def axes_for(self, role: str):
+        if role == "dp":
+            return (self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0],
+                    self.dp_size)
+        return self.tp_axis, self.tp_size
+
+
+def current() -> Optional[ActivationPolicy]:
+    return getattr(_state, "policy", None)
+
+
+@contextlib.contextmanager
+def policy(p: Optional[ActivationPolicy]):
+    prev = current()
+    _state.policy = p
+    try:
+        yield
+    finally:
+        _state.policy = prev
+
+
+def constrain(x, roles: Dict[int, str]):
+    """Apply with_sharding_constraint(P(...)) per the active policy.
+    Dims whose size does not divide the target axis are left unsharded.
+    No-op without a policy (single-host tests)."""
+    pol = current()
+    if pol is None:
+        return x
+    spec = [None] * x.ndim
+    for dim, role in roles.items():
+        axis, size = pol.axes_for(role)
+        if size > 1 and x.shape[dim] % size == 0 and x.shape[dim] > 1:
+            spec[dim] = axis
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,89 @@
+"""Catalog: tables as column arrays + (possibly stale) optimizer statistics.
+
+The engine executes on exact numpy columns; the CBO sees only `Stats`
+(row counts + per-column distinct counts estimated FROM A SAMPLE, optionally
+computed on an older version of the data) — reproducing the paper's central
+premise that pre-execution estimates are unreliable while runtime
+cardinalities are exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+ROW_OVERHEAD_BYTES = 8          # per column per row (int64 columns)
+
+
+@dataclasses.dataclass
+class Table:
+    name: str
+    columns: Dict[str, np.ndarray]
+
+    @property
+    def nrows(self) -> int:
+        return 0 if not self.columns else len(next(iter(self.columns.values())))
+
+    @property
+    def ncols(self) -> int:
+        return len(self.columns)
+
+    def bytes(self) -> int:
+        return self.nrows * self.ncols * ROW_OVERHEAD_BYTES
+
+
+@dataclasses.dataclass
+class ColumnStats:
+    n_distinct: float
+    min_val: float
+    max_val: float
+
+
+@dataclasses.dataclass
+class TableStats:
+    nrows: float
+    columns: Dict[str, ColumnStats]
+
+
+@dataclasses.dataclass
+class Stats:
+    """What the CBO believes. Built by `analyze(db, sample, noise)`; can be
+    built from an old snapshot for the dynamic-evaluation experiments."""
+    tables: Dict[str, TableStats]
+
+
+@dataclasses.dataclass
+class Database:
+    name: str
+    tables: Dict[str, Table]
+    stats: Optional[Stats] = None
+
+    def table(self, name: str) -> Table:
+        return self.tables[name]
+
+
+def analyze(db: Database, sample_frac: float = 0.05,
+            rng: Optional[np.random.Generator] = None) -> Stats:
+    """ANALYZE TABLE: sample-based statistics (distinct counts via
+    sample-scale-up — systematically wrong under skew, as in real systems)."""
+    rng = rng or np.random.default_rng(0)
+    out: Dict[str, TableStats] = {}
+    for name, t in db.tables.items():
+        cols: Dict[str, ColumnStats] = {}
+        n = t.nrows
+        k = max(32, int(n * sample_frac))
+        idx = rng.integers(0, max(n, 1), size=min(k, n)) if n else np.zeros(0, np.int64)
+        for cname, arr in t.columns.items():
+            s = arr[idx] if n else arr
+            d_sample = len(np.unique(s)) if len(s) else 0
+            # first-order jackknife scale-up (biased low under Zipf skew)
+            frac = len(s) / max(n, 1)
+            nd = d_sample / max(frac ** 0.5, 1e-9) if n else 0
+            nd = min(nd, n)
+            cols[cname] = ColumnStats(
+                n_distinct=max(nd, 1.0),
+                min_val=float(arr.min()) if n else 0.0,
+                max_val=float(arr.max()) if n else 0.0)
+        out[name] = TableStats(nrows=float(n), columns=cols)
+    return Stats(tables=out)

