@@ -8,12 +8,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_line
+from benchmarks.common import csv_line, update_bench_json
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # single warmup call (jax.block_until_ready handles tuples/pytrees);
+    # calling fn twice here used to double-compile and double-run setup work
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
@@ -59,6 +60,33 @@ def main():
     print(f"treecnn policy inference: {us:10.0f} us/call "
           f"(paper Tab. III: 317 ms/query incl. engine round-trips)")
     csv_line("treecnn_policy_inference", f"{us:.0f}", "per-stage decision")
+
+    # fused VMEM-resident TreeCNN encoder vs the vmapped jnp reference.
+    # On CPU the fused kernel runs under interpret=True (Python emulation,
+    # not TPU perf) — the unfused number is the meaningful CPU datum; both
+    # are recorded so the TPU-side trajectory has a baseline row.
+    from repro.core import nets
+    from repro.kernels.tree_conv import tree_cnn_fused
+    rng2 = np.random.default_rng(1)
+    B, N, F, H = 8, 64, meta.feat_dim, 96
+    tfeat = jnp.asarray(rng2.standard_normal((B, N, F)), jnp.float32)
+    tleft = jnp.asarray(rng2.integers(0, N, (B, N)), jnp.int32)
+    tright = jnp.asarray(rng2.integers(0, N, (B, N)), jnp.int32)
+    tmask = jnp.asarray((rng2.random((B, N)) > 0.4), jnp.float32)
+    params = agent.actor["enc"]
+    unfused = jax.jit(lambda *a: nets.apply_encoder(params, "treecnn", *a))
+    us_unfused = _time(unfused, tfeat, tleft, tright, tmask)
+    print(f"treecnn batch-8 unfused:  {us_unfused:10.0f} us/call (jnp vmap)")
+    csv_line("treecnn_b8_unfused", f"{us_unfused:.0f}", "vmap reference")
+    on_tpu = jax.default_backend() == "tpu"
+    us_fused = _time(lambda *a: tree_cnn_fused(*a, params), tfeat, tleft,
+                     tright, tmask, iters=5 if on_tpu else 1)
+    mode = "pallas" if on_tpu else "pallas-interpret"
+    print(f"treecnn batch-8 fused:    {us_fused:10.0f} us/call ({mode})")
+    csv_line("treecnn_b8_fused", f"{us_fused:.0f}", mode)
+    update_bench_json({"treecnn_b8_unfused_us": round(us_unfused, 1),
+                       "treecnn_b8_fused_us": round(us_fused, 1),
+                       "treecnn_fused_mode": mode})
     return True
 
 

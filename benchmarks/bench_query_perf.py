@@ -1,7 +1,12 @@
 """Paper Fig. 7 (end-to-end / optimization / raw execution time per method
 per benchmark), Fig. 10 (top-10 improved queries), §VII-C3 (bushy-plan
-proportion)."""
-from benchmarks.common import METHODS, csv_line, load, totals
+proportion) — plus the batched-rollout-engine throughput benchmark
+(episodes/sec, serial vs lockstep batch_size=8), which feeds
+results/BENCH_rollout.json so the perf trajectory is tracked per PR."""
+import time
+
+from benchmarks.common import (METHODS, csv_line, load, totals,
+                               update_bench_json)
 
 
 def fig7():
@@ -54,7 +59,82 @@ def bushy_proportion():
         csv_line(f"bushy_{bench}", 0, f"{b / n:.3f}")
 
 
+def bench_rollout(episodes: int = 48, batch: int = 8):
+    """Lockstep rollout engine vs the serial path, same episode stream.
+
+    Two readings: the rollout engine alone (encode -> ONE act_batch ->
+    scatter/resume, vs per-state policy_probs + per-act sampling), and
+    end-to-end training (rollouts + PPO replay). The PPO update's FLOPs
+    scale with episodes regardless of batching, so the training ratio is
+    compute-bound below the pure engine ratio on CPU."""
+    import numpy as np
+    from repro.core.agent import AgentConfig, AqoraAgent
+    from repro.core.encoding import WorkloadMeta
+    from repro.core.rollout import rollout
+    from repro.core.train_loop import train_agent
+    from repro.core.vec_rollout import rollout_batch
+    from repro.sql import datagen, workloads
+    from repro.sql.cbo import Estimator
+
+    print(f"\n== batched rollout engine: serial vs lockstep batch={batch} ==")
+    db = datagen.make_job_like(scale=0.04, seed=0)
+    wl = workloads.make_workload("job", n_train=8, n_test_per_template=1,
+                                 seed=7)
+    est = Estimator(db, db.stats)
+    meta = WorkloadMeta.from_workload(wl)
+    agent = AqoraAgent(meta, AgentConfig(), seed=0)
+    rng = np.random.default_rng(0)
+    qs = [wl.train[int(rng.integers(len(wl.train)))] for _ in range(episodes)]
+
+    # ---- rollout-engine throughput (no learning)
+    for q in qs[:4]:                                  # warm jits + caches
+        rollout(db, q, est, agent)
+    rollout_batch(db, qs[:batch], est, agent, seeds=list(range(batch)))
+    t0 = time.perf_counter()
+    for q in qs:
+        rollout(db, q, est, agent)
+    ser_eps = episodes / (time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    for i in range(0, episodes, batch):
+        rollout_batch(db, qs[i:i + batch], est, agent,
+                      seeds=list(range(batch)))
+    bat_eps = episodes / (time.perf_counter() - t0)
+    print(f"rollout  serial: {ser_eps:7.1f} eps/s   batched: {bat_eps:7.1f} "
+          f"eps/s   ({bat_eps / ser_eps:.2f}x)")
+
+    # ---- end-to-end training throughput (rollout + PPO replay)
+    def timed_train(bsz):
+        a = AqoraAgent(meta, AgentConfig(), seed=0)
+        # warm pass compiles every shape the timed pass will hit
+        train_agent(db, wl, episodes=episodes, seed=2, est=est, agent=a,
+                    batch_size=bsz, use_curriculum=False)
+        t0 = time.perf_counter()
+        train_agent(db, wl, episodes=episodes, seed=2, est=est, agent=a,
+                    batch_size=bsz, use_curriculum=False)
+        return episodes / (time.perf_counter() - t0)
+
+    ser_train = timed_train(1)
+    bat_train = timed_train(batch)
+    print(f"train    serial: {ser_train:7.1f} eps/s   batched: {bat_train:7.1f} "
+          f"eps/s   ({bat_train / ser_train:.2f}x)")
+    csv_line("rollout_serial_eps_per_s", 0, f"{ser_eps:.1f}")
+    csv_line("rollout_batched_eps_per_s", 0, f"{bat_eps:.1f}")
+    csv_line("train_batched_speedup", 0, f"{bat_train / ser_train:.2f}")
+    p = update_bench_json({
+        "batch_size": batch,
+        "rollout_serial_eps_per_s": round(ser_eps, 1),
+        "rollout_batched_eps_per_s": round(bat_eps, 1),
+        "rollout_speedup": round(bat_eps / ser_eps, 2),
+        "train_serial_eps_per_s": round(ser_train, 1),
+        "train_batched_eps_per_s": round(bat_train, 1),
+        "train_speedup": round(bat_train / ser_train, 2),
+    })
+    print(f"wrote {p}")
+    return True
+
+
 def main():
+    bench_rollout()
     ok = fig7()
     if ok:
         fig10_top10()

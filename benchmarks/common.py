@@ -34,3 +34,15 @@ def pct(rows, q):
 
 def csv_line(name, us_per_call, derived):
     print(f"CSV,{name},{us_per_call},{derived}")
+
+
+def update_bench_json(entries: dict, name: str = "BENCH_rollout.json"):
+    """Merge `entries` into results/<name> so perf trajectories accumulate
+    across benchmark modules (bench_kernels + bench_query_perf both feed
+    BENCH_rollout.json)."""
+    p = ROOT / "results" / name
+    p.parent.mkdir(parents=True, exist_ok=True)
+    data = json.loads(p.read_text()) if p.exists() else {}
+    data.update(entries)
+    p.write_text(json.dumps(data, indent=2, sort_keys=True))
+    return p

@@ -6,6 +6,12 @@ This is the paper-kind end-to-end run (the paper optimizes query serving,
 not LM pre-training): a few hundred RL episodes on one CPU.
 
   PYTHONPATH=src python examples/train_aqora.py [--episodes 200]
+                                                [--batch-size 8]
+
+--batch-size > 1 drives training through the vectorized rollout engine:
+B queries execute in lockstep, every stage boundary costs ONE batched
+policy forward, and PPO replays the whole episode-batch in one jitted
+update.
 """
 import argparse
 import time
@@ -23,6 +29,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--episodes", type=int, default=200)
     ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--batch-size", type=int, default=1,
+                    help="lockstep rollout lanes (1 = serial path)")
     args = ap.parse_args()
 
     print("building database + workload ...")
@@ -34,7 +42,8 @@ def main():
     print(f"training AQORA for {args.episodes} episodes "
           f"(curriculum: cbo-only -> +runtime leads -> full) ...")
     agent, logs = train_agent(db, wl, episodes=args.episodes, seed=0,
-                              cfg=AgentConfig(), est=est, log_every=50)
+                              cfg=AgentConfig(), est=est, log_every=50,
+                              batch_size=args.batch_size)
     print(f"trained in {time.time()-t0:.0f}s; "
           f"decision model: {agent.param_count()} params")
 

@@ -123,10 +123,10 @@ def apply_action(space: ActionSpace, state: RuntimeState, idx: int):
     earns 0; actions that add shuffles are penalized immediately.
     """
     act = space.decode(idx)
+    if act[0] == "noop":               # no plan change, no Δshuffles walk
+        return None, 0.0, 0.0
     before = planned_shuffles(state.plan, state)
     extra_plan = 0.0
-    if act[0] == "noop":
-        return None, 0.0, 0.0
     if act[0] == "cbo":
         if act[1] == 1:
             plan, t = cbo_mod.cbo_plan(state.query, state.est)

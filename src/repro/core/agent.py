@@ -36,6 +36,21 @@ class AgentConfig:
     lr_critic: float = 1e-3
     curriculum: Tuple[float, float] = (0.25, 0.55)
     failure_penalty: float = 300.0     # R(τ) -= sqrt(300) on failure
+    fused_treecnn: bool = False        # VMEM-resident fused kernel on the
+                                       #   batched inference path (TPU)
+
+
+def _node_bucket(n_used: int) -> int:
+    """Smallest multiple of 16 covering the deepest used node slot.
+
+    A plan tree over n relations has at most 2n-1 nodes (+ the null slot),
+    and encode_state numbers them contiguously from 1, so every state of a
+    workload fits in one trimmed node dimension — ONE compiled shape per
+    batch size instead of always paying the full MAX_NODES padding."""
+    b = 16
+    while b < n_used:
+        b += 16
+    return min(b, MAX_NODES)
 
 
 class AqoraAgent:
@@ -57,11 +72,15 @@ class AqoraAgent:
         self._acfg = AdamWConfig(lr=cfg.lr_actor, weight_decay=0.0, grad_clip=5.0)
         self._ccfg = AdamWConfig(lr=cfg.lr_critic, weight_decay=0.0, grad_clip=5.0)
         self.rng = jax.random.PRNGKey(seed + 1)
+        # static per-workload trimmed node dim (fcnn flattens MAX_NODES)
+        self._nodes = MAX_NODES if cfg.net == "fcnn" \
+            else _node_bucket(2 * meta.n_tables_max)
         self._build_jits()
 
     # ------------------------------------------------------------- nets
     def _build_jits(self):
         net = self.cfg.net
+        fused = self.cfg.fused_treecnn
 
         def logits_fn(actor, feat, left, right, mask):
             h = nets.apply_encoder(actor["enc"], net, feat, left, right, mask)
@@ -71,10 +90,43 @@ class AqoraAgent:
             h = nets.apply_encoder(critic["enc"], net, feat, left, right, mask)
             return nets.apply_mlp_head(critic["head"], h)[0]
 
+        def logits_fn_b(actor, feat, left, right, mask):
+            # batched (B, N, F) encoder; may lower to the fused Pallas
+            # TreeCNN (inference-only: the Pallas kernel carries no VJP)
+            h = nets.apply_encoder(actor["enc"], net, feat, left, right, mask,
+                                   fused=fused)
+            return nets.apply_mlp_head(actor["head"], h)
+
+        def value_fn_b(critic, feat, left, right, mask):
+            h = nets.apply_encoder(critic["enc"], net, feat, left, right, mask,
+                                   fused=fused)
+            return nets.apply_mlp_head(critic["head"], h)[:, 0]
+
         self._logits = jax.jit(logits_fn)
         self._value = jax.jit(value_fn)
-        self._logits_b = jax.jit(jax.vmap(logits_fn, in_axes=(None, 0, 0, 0, 0)))
-        self._value_b = jax.jit(jax.vmap(value_fn, in_axes=(None, 0, 0, 0, 0)))
+        self._logits_b = jax.jit(logits_fn_b)
+        self._value_b = jax.jit(value_fn_b)
+
+        def act_batch_fn(actor, feat, left, right, mask, amask, keys, explore):
+            """One forward + masked categorical sample for B lanes. Each
+            lane's PRNG chain advances in-kernel (split -> sample), so the
+            host only carries the returned key bytes — no per-lane device
+            round trips."""
+            lg = logits_fn_b(actor, feat, left, right, mask)
+            lg = jnp.where(amask > 0, lg, -1e9)
+            logp_all = jax.nn.log_softmax(lg, axis=-1)
+            pairs = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+            new_keys, subs = pairs[:, 0], pairs[:, 1]
+            if explore:
+                a = jax.vmap(jax.random.categorical)(subs, lg)
+            else:
+                a = jnp.argmax(lg, axis=-1)
+            a = a.astype(jnp.int32)
+            logp = jnp.take_along_axis(logp_all, a[:, None], 1)[:, 0]
+            return a, logp, new_keys
+
+        self._act_batch_jit = jax.jit(act_batch_fn,
+                                      static_argnames=("explore",))
 
         clip, eta = self.cfg.clip, self.cfg.entropy
 
@@ -113,7 +165,20 @@ class AqoraAgent:
             critic, copt, _ = adamw_update(critic, cgrad, copt, self._ccfg)
             return actor, critic, aopt, copt, al, cl_
 
-        self._update = jax.jit(update)
+        epochs = self.cfg.ppo_epochs
+
+        def update_epochs(actor, critic, aopt, copt, batch, sbatch):
+            """All e PPO epochs in ONE jitted call (lax.fori_loop), so an
+            episode-batch costs a single dispatch; params + optimizer
+            state are donated and rewritten in place."""
+            def body(_, carry):
+                actor, critic, aopt, copt, _, _ = carry
+                return update(actor, critic, aopt, copt, batch, sbatch)
+            init = (actor, critic, aopt, copt,
+                    jnp.float32(0.0), jnp.float32(0.0))
+            return jax.lax.fori_loop(0, epochs, body, init)
+
+        self._update_epochs = jax.jit(update_epochs, donate_argnums=(0, 1, 2, 3))
 
     # ------------------------------------------------------------- policy
     def policy_probs(self, enc_state, amask: np.ndarray) -> np.ndarray:
@@ -131,73 +196,148 @@ class AqoraAgent:
             a = int(np.argmax(probs))
         return a, float(np.log(max(probs[a], 1e-12)))
 
+    def act_batch(self, feat, left, right, mask, amask, keys,
+                  explore: bool = True):
+        """Act for B lanes in one jitted forward + masked categorical sample.
+
+        feat (B, N, F), left/right (B, N) int32, mask (B, N), amask (B, d),
+        keys (B, 2) uint32 per-lane PRNG keys. Returns numpy
+        (actions (B,), logps (B,), advanced keys (B, 2)) with exactly ONE
+        device sync — the single device_get below.
+
+        The node dimension is trimmed to the workload's static bucket
+        before the forward: trailing padding rows never influence real
+        nodes, so this is exact, and it cuts the dominant O(N) encoder
+        cost without fragmenting the jit cache.
+        """
+        if self.cfg.net != "fcnn":       # fcnn flattens all MAX_NODES slots
+            mask = np.asarray(mask)
+            n = min(self._nodes, _node_bucket(int(mask.sum(axis=1).max()) + 1))
+            feat, left, right, mask = (np.asarray(feat)[:, :n],
+                                       np.asarray(left)[:, :n],
+                                       np.asarray(right)[:, :n], mask[:, :n])
+        a, logp, new_keys = self._act_batch_jit(
+            self.actor, jnp.asarray(feat), jnp.asarray(left),
+            jnp.asarray(right), jnp.asarray(mask), jnp.asarray(amask),
+            jnp.asarray(keys), explore=explore)
+        a, logp, new_keys = jax.device_get((a, logp, new_keys))
+        return np.asarray(a), np.asarray(logp), np.asarray(new_keys)
+
+    def act_keyed(self, enc_state, amask: np.ndarray, key,
+                  explore: bool = True) -> Tuple[int, float, np.ndarray]:
+        """Serial act with an explicit PRNG key chain — one lane of
+        act_batch, so seeded serial and batched rollouts sample
+        identically. Returns (action, logp, advanced key)."""
+        feat, left, right, mask = enc_state
+        a, logp, new_keys = self.act_batch(
+            feat[None], left[None], right[None], mask[None],
+            np.asarray(amask)[None], np.asarray(key, np.uint32)[None],
+            explore=explore)
+        return int(a[0]), float(logp[0]), new_keys[0]
+
     def value(self, enc_state) -> float:
         feat, left, right, mask = enc_state
         return float(self._value(self.critic, feat, left, right, mask))
 
     # ------------------------------------------------------------- update
     def ppo_update(self, traj) -> Dict[str, float]:
-        """traj: rollout.Trajectory — implements Alg. 1 exactly: v_pi from
-        realized returns, q from the CURRENT critic, then e epochs of
-        clipped updates against frozen old probabilities."""
+        """Single-trajectory PPO update — an episode-batch of one (Alg. 1
+        semantics are preserved exactly at batch_size=1)."""
+        return self.ppo_update_batch([traj])
+
+    def ppo_update_batch(self, trajs) -> Dict[str, float]:
+        """One jitted PPO update over an episode-batch of trajectories.
+
+        Implements Alg. 1 per lane: v_pi from realized returns, q from the
+        CURRENT critic (one batched forward over all B*K padded states),
+        then e epochs of clipped updates against frozen old probabilities —
+        amortizing the jit dispatch and (via donate_argnums) reusing the
+        param/optimizer buffers across the whole batch.
+        """
         cfg = self.cfg
-        k = len(traj.actions)
-        if k == 0:
+        trajs = [t for t in trajs if len(t.actions) > 0]
+        if not trajs:
             return {"actor_loss": 0.0, "critic_loss": 0.0}
+        B = len(trajs)
         K = cfg.max_steps + 1
+        F = self.meta.feat_dim
 
-        def pad_states(states):
-            feat = np.zeros((K, MAX_NODES, self.meta.feat_dim), np.float32)
-            left = np.zeros((K, MAX_NODES), np.int32)
-            right = np.zeros((K, MAX_NODES), np.int32)
-            mask = np.zeros((K, MAX_NODES), np.float32)
-            for i, s in enumerate(states[:K]):
-                feat[i], left[i], right[i], mask[i] = s
-            return feat, left, right, mask
+        feat = np.zeros((B, K, MAX_NODES, F), np.float32)
+        left = np.zeros((B, K, MAX_NODES), np.int32)
+        right = np.zeros((B, K, MAX_NODES), np.int32)
+        mask = np.zeros((B, K, MAX_NODES), np.float32)
+        svalid = np.zeros((B, K), np.float32)
+        v_pi = np.zeros((B, K), np.float32)
+        amask = np.zeros((B, K - 1, self.space.d), np.float32)
+        action = np.zeros((B, K - 1), np.int32)
+        old_logp = np.zeros((B, K - 1), np.float32)
+        tvalid = np.zeros((B, K - 1), np.float32)
+        ks, n_states_b, rs_b, term_b = [], [], [], []
+        for bi, traj in enumerate(trajs):
+            k = len(traj.actions)
+            n_states = min(len(traj.states), K)
+            for i, s in enumerate(traj.states[:K]):
+                feat[bi, i], left[bi, i], right[bi, i], mask[bi, i] = s
+            svalid[bi, :n_states] = 1.0
+            # v_pi(s_i) = sum_{j>i} r_j - sqrt(T_execute)  (Alg. 1 line 2;
+            # the paper's +sqrt is a sign typo — R(tau) subtracts it)
+            rs = np.asarray(traj.rewards, np.float32)
+            term = -np.sqrt(traj.t_execute)
+            for i in range(n_states):
+                v_pi[bi, i] = rs[i:].sum() + term
+            for t in range(k):
+                amask[bi, t] = traj.masks[t]
+                action[bi, t] = traj.actions[t]
+                old_logp[bi, t] = traj.logps[t]
+                tvalid[bi, t] = 1.0
+            ks.append(k)
+            n_states_b.append(n_states)
+            rs_b.append(rs)
+            term_b.append(term)
 
-        n_states = min(len(traj.states), K)
-        feat, left, right, mask = pad_states(traj.states)
-        svalid = np.zeros(K, np.float32)
-        svalid[:n_states] = 1.0
-
-        # v_pi(s_i) = sum_{j>i} r_j - sqrt(T_execute)   (Alg. 1 line 2; the
-        # paper's +sqrt is a sign typo — R(tau) subtracts it)
-        rs = np.asarray(traj.rewards, np.float32)
-        term = -np.sqrt(traj.t_execute)
-        v_pi = np.zeros(K, np.float32)
-        for i in range(n_states):
-            v_pi[i] = rs[i:].sum() + term
+        # trim the node dimension to the batch's bucketed max (exact:
+        # trailing padding never influences real nodes; fcnn excepted).
+        # Buckets are multiples of 16, so the jit cache sees at most
+        # MAX_NODES/16 shapes per batch size.
+        N = MAX_NODES
+        if cfg.net != "fcnn":
+            N = min(self._nodes,
+                    _node_bucket(int(mask.sum(axis=2).max()) + 1))
+            feat, left = feat[:, :, :N], left[:, :, :N]
+            right, mask = right[:, :, :N], mask[:, :, :N]
 
         # q_t = r_{t+1} + v_phi(s_{t+1}) - v_phi(s_t) for every ACTION
         # (Alg. 1's trailing 0 belongs to the terminal state s_k, which has
         # no action). If the terminal state s_k was not encodable, fall back
         # to its realized value v_pi(s_k) = -sqrt(T).
-        v_phi = np.asarray(self._value_b(self.critic, feat, left, right, mask))
-        q = np.zeros(K - 1, np.float32)
-        for t in range(k):
-            v_next = v_phi[t + 1] if t + 1 < n_states else term
-            q[t] = rs[t] + v_next - v_phi[t]
+        v_phi = np.asarray(self._value_b(
+            self.critic, feat.reshape(B * K, N, F),
+            left.reshape(B * K, N), right.reshape(B * K, N),
+            mask.reshape(B * K, N))).reshape(B, K)
+        q = np.zeros((B, K - 1), np.float32)
+        for bi in range(B):
+            for t in range(ks[bi]):
+                v_next = v_phi[bi, t + 1] if t + 1 < n_states_b[bi] \
+                    else term_b[bi]
+                q[bi, t] = rs_b[bi][t] + v_next - v_phi[bi, t]
 
-        amask = np.zeros((K - 1, self.space.d), np.float32)
-        action = np.zeros(K - 1, np.int32)
-        old_logp = np.zeros(K - 1, np.float32)
-        tvalid = np.zeros(K - 1, np.float32)
-        for t in range(k):
-            amask[t] = traj.masks[t]
-            action[t] = traj.actions[t]
-            old_logp[t] = traj.logps[t]
-            tvalid[t] = 1.0
-
-        batch = {"feat": feat[:-1], "left": left[:-1], "right": right[:-1],
-                 "mask": mask[:-1], "amask": amask, "action": action,
-                 "old_logp": old_logp, "q": jnp.asarray(q), "valid": tvalid}
-        sbatch = {"feat": feat, "left": left, "right": right, "mask": mask,
-                  "v_target": jnp.asarray(v_pi), "valid": svalid}
-        al = cl = 0.0
-        for _ in range(cfg.ppo_epochs):
-            (self.actor, self.critic, self.aopt, self.copt,
-             al, cl) = self._update(self.actor, self.critic, self.aopt,
-                                    self.copt, batch, sbatch)
+        T = B * (K - 1)
+        batch = {"feat": feat[:, :-1].reshape(T, N, F),
+                 "left": left[:, :-1].reshape(T, N),
+                 "right": right[:, :-1].reshape(T, N),
+                 "mask": mask[:, :-1].reshape(T, N),
+                 "amask": amask.reshape(T, -1), "action": action.reshape(T),
+                 "old_logp": old_logp.reshape(T),
+                 "q": jnp.asarray(q.reshape(T)), "valid": tvalid.reshape(T)}
+        sbatch = {"feat": feat.reshape(B * K, N, F),
+                  "left": left.reshape(B * K, N),
+                  "right": right.reshape(B * K, N),
+                  "mask": mask.reshape(B * K, N),
+                  "v_target": jnp.asarray(v_pi.reshape(B * K)),
+                  "valid": svalid.reshape(B * K)}
+        (self.actor, self.critic, self.aopt, self.copt,
+         al, cl) = self._update_epochs(self.actor, self.critic, self.aopt,
+                                       self.copt, batch, sbatch)
         return {"actor_loss": float(al), "critic_loss": float(cl)}
 
     def param_count(self) -> int:

@@ -148,9 +148,24 @@ def init_encoder(key, kind, feat_dim, hidden, max_nodes=64):
     raise ValueError(kind)
 
 
-def apply_encoder(params, kind, feat, left, right, mask):
+def apply_encoder(params, kind, feat, left, right, mask, *, fused=False,
+                  interpret=None):
+    """Single state (N, F) -> (hidden,), or a batch (B, N, F) -> (B, hidden).
+
+    Batched treecnn may lower to the fused VMEM-resident Pallas kernel
+    (`fused=True`) — one kernel for all three conv layers + residual +
+    masked max-pool, building child one-hots in-kernel. The fused path is
+    inference-only (no VJP); training losses keep the vmapped jnp path.
+    """
     fn = {"treecnn": _apply_treecnn, "lstm": _apply_lstm,
           "fcnn": _apply_fcnn, "queryformer": _apply_qf}[kind]
+    if getattr(feat, "ndim", 2) == 3:          # batched states
+        if fused and kind == "treecnn":
+            from repro.kernels.tree_conv import tree_cnn_fused
+            return tree_cnn_fused(feat, left, right, mask, params,
+                                  interpret=interpret)
+        return jax.vmap(fn, in_axes=(None, 0, 0, 0, 0))(
+            params, feat, left, right, mask)
     return fn(params, feat, left, right, mask)
 
 

@@ -8,6 +8,11 @@ policy -> apply action via Alg. 2 -> shaping reward from Δshuffles.
 The hook's real wall time (model inference + plan transformation + any CBO
 re-planning) is charged to C_plan, mirroring the paper's ~317 ms/query
 optimization overhead accounting.
+
+`rollout` drives ONE query serially. Pass `key` (an int seed or a raw
+uint32[2] PRNG key) to sample through the agent's keyed path — the same
+split-then-sample chain one lane of `core.vec_rollout.rollout_batch` uses,
+so seeded serial and batched rollouts take identical actions.
 """
 from __future__ import annotations
 
@@ -15,13 +20,14 @@ import dataclasses
 import time
 from typing import List, Optional
 
+import jax
 import numpy as np
 
 from repro.core.actions import action_mask, apply_action
 from repro.core.encoding import WorkloadMeta, encode_state
 from repro.sql.cbo import Estimator
 from repro.sql.cluster import ClusterModel
-from repro.sql.executor import RunResult, run_adaptive
+from repro.sql.executor import RunResult, RuntimeState, run_adaptive
 from repro.sql.plans import syntactic_plan
 
 
@@ -39,18 +45,53 @@ class Trajectory:
     hook_seconds: float = 0.0
 
 
+def as_key(key) -> np.ndarray:
+    """int seed or raw key -> uint32[2] PRNG key bytes (host-side)."""
+    if isinstance(key, (int, np.integer)):
+        return np.asarray(jax.random.PRNGKey(int(key)), np.uint32)
+    return np.asarray(key, np.uint32)
+
+
+def finalize_trajectory(traj: Trajectory, res: RunResult, query, est,
+                        agent, cluster: ClusterModel, meta: WorkloadMeta,
+                        extra_plan: float) -> Trajectory:
+    """Shared epilogue: terminal critic state s_k, latency, C_plan."""
+    final = res.final_plan
+    if final is not None:
+        s = RuntimeState(query, final, {}, est, agent.cfg.max_steps,
+                         res.latency, len(res.stages), cluster)
+        try:
+            traj.states.append(encode_state(s, meta))
+        except (KeyError, IndexError, ValueError):
+            pass          # un-encodable terminal plan: critic falls back to
+            #               the realized value -sqrt(T) in ppo_update
+    traj.t_execute = cluster.timeout if res.failed else res.latency
+    traj.failed = res.failed
+    # C_plan = hook wall time (model inference + Alg. 2) + CBO re-planning
+    res.plan_time += traj.hook_seconds + extra_plan
+    traj.result = res
+    return traj
+
+
 def rollout(db, query, est: Estimator, agent, *, stage: int = 3,
             explore: bool = True,
-            cluster: ClusterModel = ClusterModel()) -> Trajectory:
+            cluster: Optional[ClusterModel] = None,
+            key=None) -> Trajectory:
+    cluster = cluster if cluster is not None else ClusterModel()
     traj = Trajectory()
     meta = agent.meta
     extra_plan = [0.0]
+    keybox = [None if key is None else as_key(key)]
 
     def hook(state):
         t0 = time.perf_counter()
         enc = encode_state(state, meta)
         am = action_mask(agent.space, state, stage=stage)
-        a, logp = agent.act(enc, am, explore=explore)
+        if keybox[0] is not None and hasattr(agent, "act_keyed"):
+            a, logp, keybox[0] = agent.act_keyed(enc, am, keybox[0],
+                                                 explore=explore)
+        else:
+            a, logp = agent.act(enc, am, explore=explore)
         new_plan, r, extra = apply_action(agent.space, state, a)
         traj.states.append(enc)
         traj.actions.append(a)
@@ -66,21 +107,5 @@ def rollout(db, query, est: Estimator, agent, *, stage: int = 3,
     res = run_adaptive(db, query, plan0, est, cluster, hook=hook,
                        max_hook_steps=agent.cfg.max_steps,
                        plan_time=0.0)
-    # terminal state s_k for the critic (the fully-executed plan)
-    final = res.final_plan
-    if final is not None:
-        class _S:                                     # minimal view
-            pass
-        s = _S()
-        s.query, s.plan, s.mats, s.est = query, final, {}, est
-        s.step, s.stages_done, s.elapsed = agent.cfg.max_steps, len(res.stages), res.latency
-        try:
-            traj.states.append(encode_state(s, meta))
-        except Exception:
-            pass
-    traj.t_execute = cluster.timeout if res.failed else res.latency
-    traj.failed = res.failed
-    # C_plan = hook wall time (model inference + Alg. 2) + CBO re-planning
-    res.plan_time += traj.hook_seconds + extra_plan[0]
-    traj.result = res
-    return traj
+    return finalize_trajectory(traj, res, query, est, agent, cluster, meta,
+                               extra_plan[0])

@@ -1,8 +1,13 @@
 """AQORA training + evaluation loops (§V-A4, §VII-A4c).
 
 train_agent: episodes over the training workload with the curriculum
-schedule; one PPO update per completed query (the paper replays the k-step
-trajectory after each query, Alg. 1).
+schedule. Serial (`batch_size=1`): one PPO update per completed query (the
+paper replays the k-step trajectory after each query, Alg. 1). Batched
+(`batch_size=B`): B queries run in lockstep through the vectorized rollout
+engine — one policy forward per stage boundary for the whole batch — and
+their trajectories are replayed by ONE jitted PPO update per episode-batch
+(Alg. 1 semantics per trajectory are unchanged; only the dispatch is
+amortized).
 
 evaluate: run test queries with the trained policy (argmax, no
 exploration); returns per-query RunResults for the benchmark tables.
@@ -19,6 +24,7 @@ from repro.core.actions import curriculum_stage
 from repro.core.agent import AgentConfig, AqoraAgent
 from repro.core.encoding import WorkloadMeta
 from repro.core.rollout import rollout
+from repro.core.vec_rollout import rollout_batch
 from repro.sql.catalog import Database
 from repro.sql.cbo import Estimator
 from repro.sql.cluster import ClusterModel
@@ -41,43 +47,84 @@ class EpisodeLog:
 def train_agent(db: Database, workload: Workload, *,
                 episodes: int = 300, seed: int = 0,
                 cfg: AgentConfig = AgentConfig(),
-                cluster: ClusterModel = ClusterModel(),
+                cluster: Optional[ClusterModel] = None,
                 est: Optional[Estimator] = None,
                 use_curriculum: bool = True,
                 agent=None,
+                batch_size: int = 1,
                 log_every: int = 0) -> Tuple[AqoraAgent, List[EpisodeLog]]:
+    cluster = cluster if cluster is not None else ClusterModel()
     meta = WorkloadMeta.from_workload(workload)
     if agent is None:
         agent = AqoraAgent(meta, cfg, seed=seed)
     est = est or Estimator(db, db.stats)
     rng = np.random.default_rng(seed)
     logs: List[EpisodeLog] = []
-    for ep in range(episodes):
-        q = workload.train[int(rng.integers(len(workload.train)))]
-        stage = curriculum_stage(ep, episodes, cfg.curriculum) if use_curriculum else 3
-        traj = rollout(db, q, est, agent, stage=stage, explore=True,
-                       cluster=cluster)
-        m = agent.ppo_update(traj)
-        logs.append(EpisodeLog(ep, q.name, traj.t_execute, traj.failed,
-                               traj.decoded, traj.rewards,
-                               m["actor_loss"], m["critic_loss"], stage))
-        if log_every and (ep + 1) % log_every == 0:
+
+    def log_progress(ep_start, n_eps, stage, m):
+        # fire when this (batch of) episode(s) crosses a log_every boundary,
+        # so batched runs keep the serial cadence for any log_every
+        if log_every and \
+                (ep_start + n_eps) // log_every > ep_start // log_every:
             recent = logs[-log_every:]
             lat = np.mean([l.latency for l in recent])
             fails = sum(l.failed for l in recent)
-            print(f"  ep {ep+1:4d} stage={stage} mean_lat={lat:7.2f}s "
+            print(f"  ep {ep_start+n_eps:4d} stage={stage} "
+                  f"mean_lat={lat:7.2f}s "
                   f"fails={fails} aloss={m['actor_loss']:+.3f}")
+
+    ep = 0
+    while ep < episodes:
+        stage = curriculum_stage(ep, episodes, cfg.curriculum) \
+            if use_curriculum else 3
+        if batch_size <= 1:
+            q = workload.train[int(rng.integers(len(workload.train)))]
+            traj = rollout(db, q, est, agent, stage=stage, explore=True,
+                           cluster=cluster)
+            m = agent.ppo_update(traj)
+            logs.append(EpisodeLog(ep, q.name, traj.t_execute, traj.failed,
+                                   traj.decoded, traj.rewards,
+                                   m["actor_loss"], m["critic_loss"], stage))
+            log_progress(ep, 1, stage, m)
+            ep += 1
+            continue
+        # ---- lockstep episode-batch: B rollouts, ONE jitted PPO update
+        bs = min(batch_size, episodes - ep)
+        qs = [workload.train[int(rng.integers(len(workload.train)))]
+              for _ in range(bs)]
+        seeds = [int(rng.integers(2 ** 31)) for _ in range(bs)]
+        trajs = rollout_batch(db, qs, est, agent, stage=stage, explore=True,
+                              cluster=cluster, seeds=seeds)
+        if hasattr(agent, "ppo_update_batch"):
+            m = agent.ppo_update_batch(trajs)
+        else:                              # e.g. DQN: per-trajectory replay
+            for traj in trajs:
+                m = agent.ppo_update(traj)
+        for i, (q, traj) in enumerate(zip(qs, trajs)):
+            logs.append(EpisodeLog(ep + i, q.name, traj.t_execute,
+                                   traj.failed, traj.decoded, traj.rewards,
+                                   m["actor_loss"], m["critic_loss"], stage))
+        log_progress(ep, bs, stage, m)
+        ep += bs
     return agent, logs
 
 
 def evaluate(db: Database, queries, agent: AqoraAgent, *,
              est: Optional[Estimator] = None,
-             cluster: ClusterModel = ClusterModel()) -> List[Dict]:
+             cluster: Optional[ClusterModel] = None,
+             batch_size: int = 1) -> List[Dict]:
+    cluster = cluster if cluster is not None else ClusterModel()
     est = est or Estimator(db, db.stats)
+    if batch_size > 1:
+        trajs = []
+        for i in range(0, len(queries), batch_size):
+            trajs += rollout_batch(db, queries[i:i + batch_size], est, agent,
+                                   stage=3, explore=False, cluster=cluster)
+    else:
+        trajs = [rollout(db, q, est, agent, stage=3, explore=False,
+                         cluster=cluster) for q in queries]
     out = []
-    for q in queries:
-        traj = rollout(db, q, est, agent, stage=3, explore=False,
-                       cluster=cluster)
+    for q, traj in zip(queries, trajs):
         r = traj.result
         out.append({
             "query": q.name, "latency": r.latency, "plan_time": r.plan_time,

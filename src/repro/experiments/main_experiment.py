@@ -38,7 +38,8 @@ def make_db(bench: str, seed: int = 0, year_max=None):
 
 
 def run_bench(bench: str, seed: int = 0, episodes=None, out_name=None,
-              train_db=None, test_db=None, quiet=False) -> dict:
+              train_db=None, test_db=None, quiet=False,
+              batch_size: int = 1) -> dict:
     t_start = time.time()
     db = train_db if train_db is not None else make_db(bench, seed)
     tdb = test_db if test_db is not None else db
@@ -101,6 +102,7 @@ def run_bench(bench: str, seed: int = 0, episodes=None, out_name=None,
     # ---------------- AQORA
     agent, logs = train_agent(db, wl, episodes=episodes, seed=seed,
                               cfg=AgentConfig(), cluster=cluster, est=est,
+                              batch_size=batch_size,
                               log_every=0 if quiet else 60)
     aq = evaluate(tdb, wl.test, agent, est=test_est, cluster=cluster)
     out["aqora"] = aq
@@ -122,6 +124,10 @@ def main():
     ap.add_argument("--bench", default=None)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--batch-size", type=int, default=1,
+                    help="lockstep rollout lanes for AQORA training "
+                         "(1 = the paper's per-query replay; >1 pools "
+                         "updates per episode-batch)")
     args = ap.parse_args()
     benches = ["job", "extjob", "stack"] if args.all else [args.bench]
     for b in benches:
@@ -129,7 +135,7 @@ def main():
         if out.exists() and not args.force:
             print(f"skip cached {b}")
             continue
-        run_bench(b)
+        run_bench(b, batch_size=args.batch_size)
 
 
 if __name__ == "__main__":

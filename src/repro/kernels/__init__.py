@@ -4,8 +4,15 @@ pure-jnp oracle in ref.py and a jit'd model-layout wrapper in ops.py:
   flash_attention — online-softmax attention, VMEM accumulators, GQA index
                     maps, causal/sliding-window/softcap
   mamba_scan      — chunked selective scan, VMEM-resident state
-  tree_conv       — AQORA TreeCNN layer; child gathers as one-hot MXU matmuls
+  tree_conv       — one AQORA TreeCNN layer; child gathers as one-hot MXU
+                    matmuls (one-hots built on the host, shipped via HBM)
+  tree_cnn_fused  — the whole TreeCNN encoder (3 conv layers + residual +
+                    masked max-pool) in ONE VMEM-resident kernel over
+                    multi-tree tiles; child one-hots are rebuilt in-kernel
+                    from iota==idx compares, so no (B, N, N) matrices and
+                    no intermediate activations ever touch HBM
 
-Validated in interpret=True mode on CPU (tests/test_kernels.py); on real
-TPUs they swap in behind the model's pure-jnp paths.
+Validated in interpret=True mode on CPU (tests/test_kernels.py,
+tests/test_vec_rollout.py); on real TPUs they swap in behind the model's
+pure-jnp paths (tree_cnn_fused via AgentConfig.fused_treecnn).
 """

@@ -37,6 +37,8 @@ def selective_scan_fused(x, dt, A, Bs, Cs, D_skip, *, chunk=128,
 
 
 def tree_conv_batch(feat, left, right, mask, params, *, interpret=False):
-    """AQORA TreeCNN layer: params {wr, wl, wrt, b} as in core.nets."""
+    """AQORA TreeCNN layer: params {wr, wl, wrt, b} as in core.nets.
+    The whole fused encoder (tree_cnn_fused) is dispatched directly by
+    core.nets.apply_encoder rather than wrapped here."""
     return tree_conv(feat, left, right, mask, params["wr"], params["wl"],
                      params["wrt"], params["b"], interpret=interpret)

@@ -10,6 +10,18 @@ three MXU matmuls fused in one VMEM-resident kernel:
 
 Trees are padded to MAX_NODES=64, so a whole batch tile (trees x nodes x
 feat) fits VMEM comfortably; grid is over tree batches.
+
+Two entry points:
+
+  tree_conv      — ONE conv layer; builds the (B, N, N) one-hots on the
+                   host with jax.nn.one_hot and ships them through HBM
+                   (legacy; kept as the per-layer building block).
+  tree_cnn_fused — the WHOLE encoder: all three conv layers + residual +
+                   masked max-pool in one VMEM-resident kernel over
+                   multi-tree tiles. Child one-hot matrices are built
+                   in-kernel from `iota == idx` comparisons, so no
+                   O(B*N^2) one-hot traffic ever touches HBM and no
+                   intermediate (B, N, H) activations round-trip either.
 """
 from __future__ import annotations
 
@@ -67,3 +79,100 @@ def tree_conv(feat, left, right, mask, wr, wl, wrt, b, *, interpret=False):
         out_shape=jax.ShapeDtypeStruct((Bt, N, H), feat.dtype),
         interpret=interpret,
     )(feat, onehot_l, onehot_r, m, wr, wl, wrt, b)
+
+
+# ------------------------------------------------------------- fused encoder
+def _fused_kernel(h_ref, li_ref, ri_ref, m_ref,
+                  w1r, w1l, w1t, b1, w2r, w2l, w2t, b2, w3r, w3l, w3t, b3,
+                  o_ref):
+    """One multi-tree tile: (TB, N, F) feats -> (TB, H) pooled encodings.
+
+    The child one-hots are rebuilt in VMEM from index comparisons — row n
+    of L is one-hot at column left[n], so L @ h == h[left] — and every
+    intermediate activation lives and dies in VMEM.
+    """
+    TB = h_ref.shape[0]
+    N = h_ref.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (N, N), 1)
+
+    def layer(h, m, lo, ro, wr, wl, wt, b):
+        hl = jax.lax.dot_general(lo, h, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        hr = jax.lax.dot_general(ro, h, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        out = (h @ wr[...].astype(jnp.float32)
+               + hl @ wl[...].astype(jnp.float32)
+               + hr @ wt[...].astype(jnp.float32)
+               + b[...].astype(jnp.float32)[None, :])
+        out = jnp.where(out > 0, out, 0.01 * out)           # leaky_relu
+        return out * m
+
+    def one_tree(t, carry):
+        m = m_ref[t].astype(jnp.float32)                    # (N, 1)
+        lo = (iota == li_ref[t]).astype(jnp.float32)        # (N, N) in VMEM
+        ro = (iota == ri_ref[t]).astype(jnp.float32)
+        h = h_ref[t].astype(jnp.float32) * m                # (N, F)
+        h1 = layer(h, m, lo, ro, w1r, w1l, w1t, b1)
+        h2 = layer(h1, m, lo, ro, w2r, w2l, w2t, b2)
+        h3 = layer(h2, m, lo, ro, w3r, w3l, w3t, b3) + h2   # residual
+        neg = jnp.where(m > 0, h3, -jnp.inf)                # masked max-pool
+        pooled = jnp.max(neg, axis=0)
+        pooled = jnp.where(jnp.isfinite(pooled), pooled, 0.0)
+        o_ref[t] = pooled.astype(o_ref.dtype)
+        return carry
+
+    jax.lax.fori_loop(0, TB, one_tree, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def tree_cnn_fused(feat, left, right, mask, params, *, tile=8,
+                   interpret=None):
+    """Fused TreeCNN encoder: conv1..conv3 + residual + masked max-pool.
+
+    feat: (B, N, F); left/right: (B, N) int32 child indices (0 = null,
+    row 0 must be a zero row); mask: (B, N); params: the core.nets treecnn
+    dict {"conv1"|"conv2"|"conv3": {"wr","wl","wrt","b"}}. Returns (B, H)
+    pooled encodings. Only (B, N) index vectors cross HBM — the one-hot
+    matrices and all intermediate activations exist in VMEM only.
+    `interpret=None` auto-selects interpreter mode off-TPU.
+    """
+    B, N, F = feat.shape
+    H = params["conv1"]["wr"].shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    TB = min(tile, B)
+    Bp = ((B + TB - 1) // TB) * TB
+    if Bp != B:                       # pad to a whole number of tiles; the
+        pad = ((0, Bp - B), (0, 0))   # all-zero mask rows pool to 0
+        feat = jnp.pad(feat, pad + ((0, 0),))
+        left = jnp.pad(left, pad)
+        right = jnp.pad(right, pad)
+        mask = jnp.pad(mask, pad)
+    li = left.astype(jnp.int32)[..., None]                  # (Bp, N, 1)
+    ri = right.astype(jnp.int32)[..., None]
+    m = mask[..., None].astype(feat.dtype)                  # (Bp, N, 1)
+
+    wspec = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    w = []
+    specs = []
+    for lname in ("conv1", "conv2", "conv3"):
+        p = params[lname]
+        w += [p["wr"], p["wl"], p["wrt"], p["b"]]
+        d_in = p["wr"].shape[0]
+        specs += [wspec((d_in, H)), wspec((d_in, H)), wspec((d_in, H)),
+                  wspec((H,))]
+
+    out = pl.pallas_call(
+        _fused_kernel,
+        grid=(Bp // TB,),
+        in_specs=[
+            pl.BlockSpec((TB, N, F), lambda i: (i, 0, 0)),
+            pl.BlockSpec((TB, N, 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((TB, N, 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((TB, N, 1), lambda i: (i, 0, 0)),
+        ] + specs,
+        out_specs=pl.BlockSpec((TB, H), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, H), feat.dtype),
+        interpret=interpret,
+    )(feat, li, ri, m, *w)
+    return out[:B]

@@ -17,7 +17,7 @@ shuffle counts and bytes are exact.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, Generator, List, Optional, Tuple
 
 import numpy as np
 
@@ -42,6 +42,8 @@ class MaterializedRel:
     nrows: int
     width: float                                 # modeled row width (bytes)
     partitioned_on: Optional[Tuple[str, str]] = None
+    sig: Optional[tuple] = None                  # structural signature: the
+    #   deterministic derivation of this rel (stage-reuse cache key)
 
     @property
     def bytes(self) -> float:
@@ -106,27 +108,69 @@ def _needed_cols(query: Query, alias: str) -> List[str]:
 
 
 class Executor:
-    def __init__(self, db: Database, cluster: ClusterModel = ClusterModel()):
+    """Stage executor with cross-run stage reuse (Spark's ReuseExchange,
+    lifted across episodes): scans and join ROW SETS are deterministic
+    given (table, filters, conds), so repeated executions of the same
+    query — the training loop replays its workload every episode — skip
+    the numpy work and only re-charge the modeled latency. Latency,
+    shuffle accounting and OOM checks are always recomputed against THIS
+    run's cluster, so results are bit-identical with the cache off."""
+
+    _CACHE_MAX_BYTES = 256 * 1024 * 1024   # per-db budget; cleared beyond
+    _ENTRY_MAX_BYTES = 32 * 1024 * 1024    # huge stages are not worth pinning
+
+    def __init__(self, db: Database, cluster: Optional[ClusterModel] = None,
+                 reuse_stages: bool = True):
         self.db = db
-        self.cluster = cluster
+        self.cluster = cluster if cluster is not None else ClusterModel()
+        if reuse_stages:
+            if not hasattr(db, "_stage_cache"):
+                db._stage_cache = {}
+                db._stage_cache_bytes = 0
+            self._cache = db._stage_cache
+        else:
+            self._cache = None
+
+    def _cache_put(self, sig, cols: Dict, entry) -> None:
+        """Insert bounded by BYTES, not entry count: materialized stages
+        can hold millions of rows, so an entry cap alone would let the
+        host grow without limit over a long training run."""
+        nbytes = sum(v.nbytes for v in cols.values())
+        if nbytes > self._ENTRY_MAX_BYTES:
+            return
+        if self.db._stage_cache_bytes + nbytes > self._CACHE_MAX_BYTES:
+            self._cache.clear()
+            self.db._stage_cache_bytes = 0
+        self._cache[sig] = entry
+        self.db._stage_cache_bytes += nbytes
 
     # -------------------------------------------------- base scan
     def scan(self, query: Query, alias: str) -> Tuple[MaterializedRel, float]:
         rel = query.relation(alias)
         t = self.db.table(rel.table)
+        need = tuple(_needed_cols(query, alias))
+        sig = ("s", alias, rel.table, rel.filters, need)
+        secs = self.cluster.scan_time(t.bytes())
+        if self._cache is not None and sig in self._cache:
+            cols, nrows = self._cache[sig]
+            width = 8.0 * max(1, t.ncols)
+            return MaterializedRel(frozenset([alias]), dict(cols), nrows,
+                                   width, sig=sig), secs
         mask = np.ones(t.nrows, bool)
         for f in rel.filters:
             mask &= f.apply(t.columns[f.column])
         idx = np.flatnonzero(mask)
         cols = {}
-        for c in _needed_cols(query, alias):
+        for c in need:
             if c in t.columns:
                 cols[(alias, c)] = t.columns[c][idx]
             else:                        # implicit PK "id" = row index
                 cols[(alias, c)] = idx.astype(np.int64)
         width = 8.0 * max(1, t.ncols)
-        m = MaterializedRel(frozenset([alias]), cols, len(idx), width)
-        secs = self.cluster.scan_time(t.bytes())
+        m = MaterializedRel(frozenset([alias]), cols, len(idx), width,
+                            sig=sig)
+        if self._cache is not None:
+            self._cache_put(sig, cols, (dict(cols), len(idx)))
         return m, secs
 
     # -------------------------------------------------- join stage
@@ -136,29 +180,48 @@ class Executor:
         c0 = conds[0]
         # orient: c0.left must live in `left`
         if c0.left in left.aliases:
-            lkey = left.columns[(c0.left, c0.lcol)]
-            rkey = right.columns[(c0.right, c0.rcol)]
             key_l, key_r = (c0.left, c0.lcol), (c0.right, c0.rcol)
         else:
-            lkey = left.columns[(c0.right, c0.rcol)]
-            rkey = right.columns[(c0.left, c0.lcol)]
             key_l, key_r = (c0.right, c0.rcol), (c0.left, c0.lcol)
 
-        lidx, ridx = _join_indices(lkey, rkey, cl.materialize_cap)
-        # residual equality conditions
-        keep = np.ones(len(lidx), bool)
-        for c in conds[1:]:
-            if c.left in left.aliases:
-                la, ra = (c.left, c.lcol), (c.right, c.rcol)
-            else:
-                la, ra = (c.right, c.rcol), (c.left, c.lcol)
-            keep &= left.columns[la][lidx] == right.columns[ra][ridx]
-        if not keep.all():
-            lidx, ridx = lidx[keep], ridx[keep]
-        out_cols = {k: v[lidx] for k, v in left.columns.items()}
-        out_cols.update({k: v[ridx] for k, v in right.columns.items()})
-        out = MaterializedRel(left.aliases | right.aliases, out_cols,
-                              len(lidx), left.width + right.width)
+        sig = None
+        if self._cache is not None and left.sig is not None \
+                and right.sig is not None:
+            sig = ("j", left.sig, right.sig, tuple(conds))
+        hit = self._cache.get(sig) if sig is not None else None
+        if hit is not None:
+            out_cols, nrows, pre_total = hit
+            # the matched-rows cap guards THIS run's cluster, not the one
+            # that populated the cache
+            if pre_total > cl.materialize_cap:
+                raise QueryFailure(
+                    "oom", f"join output {pre_total} rows exceeds cap")
+            out = MaterializedRel(left.aliases | right.aliases,
+                                  dict(out_cols), nrows,
+                                  left.width + right.width, sig=sig)
+        else:
+            lkey = left.columns[key_l]
+            rkey = right.columns[key_r]
+            lidx, ridx = _join_indices(lkey, rkey, cl.materialize_cap)
+            pre_total = len(lidx)
+            # residual equality conditions
+            keep = np.ones(len(lidx), bool)
+            for c in conds[1:]:
+                if c.left in left.aliases:
+                    la, ra = (c.left, c.lcol), (c.right, c.rcol)
+                else:
+                    la, ra = (c.right, c.rcol), (c.left, c.lcol)
+                keep &= left.columns[la][lidx] == right.columns[ra][ridx]
+            if not keep.all():
+                lidx, ridx = lidx[keep], ridx[keep]
+            out_cols = {k: v[lidx] for k, v in left.columns.items()}
+            out_cols.update({k: v[ridx] for k, v in right.columns.items()})
+            out = MaterializedRel(left.aliases | right.aliases, out_cols,
+                                  len(lidx), left.width + right.width,
+                                  sig=sig)
+            if sig is not None:
+                self._cache_put(sig, out_cols,
+                                (dict(out_cols), len(lidx), pre_total))
 
         # ---- latency + shuffle accounting
         shuffles = 0
@@ -196,6 +259,7 @@ class RuntimeState:
     step: int                                    # hook invocations so far
     elapsed: float
     stages_done: int
+    cluster: Optional[ClusterModel] = None       # the run's configured cluster
 
     def leaf_rows(self, leaf: Leaf) -> Optional[int]:
         m = self.mats.get(leaf.covered())
@@ -219,8 +283,7 @@ def planned_shuffles(plan: Node, state: RuntimeState) -> int:
     """Shuffle exchanges the remaining plan would execute, using actual
     sizes where known and estimates elsewhere (drives the shaping reward
     r_i = -(Δ shuffles)/10)."""
-    cl = state.est and state.est.db and None   # noqa - just for readability
-    cluster = ClusterModel()
+    cluster = state.cluster if state.cluster is not None else ClusterModel()
     count = 0
 
     def visit(node) -> Tuple[float, Optional[Tuple[str, str]]]:
@@ -279,8 +342,175 @@ def annotate_methods(plan: Node, query: Query, est: Estimator,
     return plan
 
 
+class AdaptiveRun:
+    """Resumable adaptive execution of ONE query.
+
+    The extension hook becomes a suspension point instead of a callback:
+    `start()` advances execution to the first stage boundary with hook
+    budget remaining and returns the `RuntimeState`; `resume(new_plan)`
+    injects the hook's decision (a replacement remaining plan, or None to
+    keep the current one) and advances to the next boundary. When the query
+    runs to completion or fails, the call returns None and `result` holds
+    the finished `RunResult`.
+
+    This is what lets `core.vec_rollout` hold B suspended runs and feed all
+    their pending states through one batched policy call per lockstep step;
+    `run_adaptive` below drives a single run with the legacy callback.
+    """
+
+    def __init__(self, db: Database, query: Query, plan: Node, est: Estimator,
+                 cluster: Optional[ClusterModel] = None,
+                 max_hook_steps: int = 3,
+                 plan_time: float = 0.0,
+                 aqe_switching: bool = True):
+        self.cluster = cluster if cluster is not None else ClusterModel()
+        self.query = query
+        self.max_hook_steps = max_hook_steps
+        self.plan_time = plan_time
+        self.aqe_switching = aqe_switching
+        self.state = RuntimeState(query, copy_plan(plan), {}, est, 0, 0.0, 0,
+                                  self.cluster)
+        self.result: Optional[RunResult] = None
+        self._ex = Executor(db, self.cluster)
+        self._stages: List[StageRecord] = []
+        self._tot_shuffles = 0
+        self._tot_sbytes = 0.0
+        self._bushy = False
+        self._failure: Optional[QueryFailure] = None
+        self._gen = self._drive()
+        self._started = False
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    # ------------------------------------------------------------- driving
+    def start(self) -> Optional[RuntimeState]:
+        """Advance to the first suspension point (or to completion)."""
+        assert not self._started, "start() may only be called once"
+        self._started = True
+        return self._step(lambda: next(self._gen))
+
+    def resume(self, new_plan: Optional[Node] = None) -> Optional[RuntimeState]:
+        """Deliver the hook's decision and advance to the next boundary."""
+        assert self._started, "call start() before resume()"
+        if self.result is not None:
+            return None
+        return self._step(lambda: self._gen.send(new_plan))
+
+    def _step(self, advance) -> Optional[RuntimeState]:
+        try:
+            return advance()
+        except StopIteration:
+            cl, st = self.cluster, self.state
+            if self._failure is not None:
+                self.result = RunResult(cl.timeout, self.plan_time, True,
+                                        self._failure.kind, self._stages,
+                                        self._tot_shuffles, self._tot_sbytes,
+                                        st.plan, self._bushy)
+            else:
+                self.result = RunResult(st.elapsed, self.plan_time, False, "",
+                                        self._stages, self._tot_shuffles,
+                                        self._tot_sbytes, st.plan, self._bushy)
+            return None
+
+    # ----------------------------------------------------------- execution
+    def _drive(self) -> Generator[RuntimeState, Optional[Node], None]:
+        state, cluster, ex, query = (self.state, self.cluster, self._ex,
+                                     self.query)
+
+        def charge(seconds: float):
+            state.elapsed += seconds
+            if state.elapsed >= cluster.timeout:
+                raise QueryFailure("timeout", f"{state.elapsed:.1f}s")
+
+        try:
+            while True:
+                # ---- extension hook (pre-exec at step 0, then per stage)
+                if state.step < self.max_hook_steps:
+                    new_plan = yield state
+                    state.step += 1
+                    if new_plan is not None:
+                        state.plan = new_plan
+                if isinstance(state.plan, Leaf):
+                    # plan may be a single leaf only if query has 1 relation
+                    if state.plan.covered() not in state.mats:
+                        m, secs = ex.scan(query, state.plan.alias)
+                        charge(secs)
+                        state.mats[m.aliases] = m
+                    return
+
+                # ---- find next executable join (leftmost-deepest)
+                def next_join(node) -> Optional[Join]:
+                    if isinstance(node, Leaf):
+                        return None
+                    j = next_join(node.left)
+                    if j is not None:
+                        return j
+                    j = next_join(node.right)
+                    if j is not None:
+                        return j
+                    if isinstance(node.left, Leaf) and isinstance(node.right, Leaf):
+                        return node
+                    return None
+
+                jn = next_join(state.plan)
+                assert jn is not None
+                # materialize child scans
+                sides = []
+                for ch in (jn.left, jn.right):
+                    key = ch.covered()
+                    if key not in state.mats:
+                        m, secs = ex.scan(query, ch.alias)
+                        charge(secs)
+                        state.mats[key] = m
+                    sides.append(state.mats[key])
+                left_m, right_m = sides
+
+                # ---- AQE operator selection with ACTUAL sizes (Spark rule)
+                method = jn.method
+                hinted = any(isinstance(ch, Leaf) and ch.broadcast_hint
+                             for ch in (jn.left, jn.right))
+                if hinted:
+                    method = BHJ
+                elif self.aqe_switching:
+                    # Spark AQE: re-decide from ACTUAL sizes at the boundary
+                    method = BHJ if min(left_m.bytes, right_m.bytes) < cluster.bjt \
+                        else SMJ
+
+                # joining two multi-alias intermediates == bushy shape (§VI-B1)
+                if len(left_m.aliases) > 1 and len(right_m.aliases) > 1:
+                    self._bushy = True
+                out, rec = ex.join(query, left_m, right_m, jn.conds, method)
+                charge(rec.seconds)
+                self._stages.append(rec)
+                self._tot_shuffles += rec.shuffles
+                self._tot_sbytes += rec.shuffle_bytes
+                state.stages_done += 1
+                state.mats[out.aliases] = out
+
+                # ---- replace the executed join by a stage-result leaf
+                new_leaf = Leaf(out.aliases, stage_id=state.stages_done)
+
+                def replace(node):
+                    if node is jn:
+                        return new_leaf
+                    if isinstance(node, Leaf):
+                        return node
+                    node.left = replace(node.left)
+                    node.right = replace(node.right)
+                    return node
+
+                state.plan = replace(state.plan)
+                if isinstance(state.plan, Leaf):
+                    return
+        except QueryFailure as f:
+            self._failure = f
+            return
+
+
 def run_adaptive(db: Database, query: Query, plan: Node, est: Estimator,
-                 cluster: ClusterModel = ClusterModel(),
+                 cluster: Optional[ClusterModel] = None,
                  hook: Optional[HookFn] = None,
                  max_hook_steps: int = 3,
                  plan_time: float = 0.0,
@@ -290,102 +520,14 @@ def run_adaptive(db: Database, query: Query, plan: Node, est: Estimator,
     The hook is invoked at stage boundaries (including once pre-execution,
     matching AQORA's two-phase optimization) at most `max_hook_steps` times;
     it may return a REPLACEMENT remaining plan (built from the same leaves).
+    Implemented by driving an `AdaptiveRun` to completion.
     """
-    ex = Executor(db, cluster)
-    state = RuntimeState(query, copy_plan(plan), {}, est, 0, 0.0, 0)
-    stages: List[StageRecord] = []
-    tot_shuffles, tot_sbytes = 0, 0.0
-    bushy = False
-
-    def charge(seconds: float):
-        state.elapsed += seconds
-        if state.elapsed >= cluster.timeout:
-            raise QueryFailure("timeout", f"{state.elapsed:.1f}s")
-
-    try:
-        while True:
-            # ---- extension hook (pre-exec at step 0, then per stage)
-            if hook is not None and state.step < max_hook_steps:
-                new_plan = hook(state)
-                state.step += 1
-                if new_plan is not None:
-                    state.plan = new_plan
-            if isinstance(state.plan, Leaf):
-                # plan may be a single leaf only if query has 1 relation
-                if state.plan.covered() not in state.mats:
-                    m, secs = ex.scan(query, state.plan.alias)
-                    charge(secs)
-                    state.mats[m.aliases] = m
-                break
-
-            # ---- find next executable join (leftmost-deepest)
-            def next_join(node) -> Optional[Join]:
-                if isinstance(node, Leaf):
-                    return None
-                j = next_join(node.left)
-                if j is not None:
-                    return j
-                j = next_join(node.right)
-                if j is not None:
-                    return j
-                if isinstance(node.left, Leaf) and isinstance(node.right, Leaf):
-                    return node
-                return None
-
-            jn = next_join(state.plan)
-            assert jn is not None
-            # materialize child scans
-            sides = []
-            for ch in (jn.left, jn.right):
-                key = ch.covered()
-                if key not in state.mats:
-                    m, secs = ex.scan(query, ch.alias)
-                    charge(secs)
-                    state.mats[key] = m
-                sides.append(state.mats[key])
-            left_m, right_m = sides
-
-            # ---- AQE operator selection with ACTUAL sizes (Spark rule)
-            method = jn.method
-            hinted = any(isinstance(ch, Leaf) and ch.broadcast_hint
-                         for ch in (jn.left, jn.right))
-            if hinted:
-                method = BHJ
-            elif aqe_switching:
-                # Spark AQE: re-decide from ACTUAL sizes at the boundary
-                method = BHJ if min(left_m.bytes, right_m.bytes) < cluster.bjt \
-                    else SMJ
-
-            # joining two multi-alias intermediates == bushy shape (§VI-B1)
-            if len(left_m.aliases) > 1 and len(right_m.aliases) > 1:
-                bushy = True
-            out, rec = ex.join(query, left_m, right_m, jn.conds, method)
-            charge(rec.seconds)
-            stages.append(rec)
-            tot_shuffles += rec.shuffles
-            tot_sbytes += rec.shuffle_bytes
-            state.stages_done += 1
-            state.mats[out.aliases] = out
-
-            # ---- replace the executed join by a stage-result leaf
-            new_leaf = Leaf(out.aliases, stage_id=state.stages_done)
-
-            def replace(node):
-                if node is jn:
-                    return new_leaf
-                if isinstance(node, Leaf):
-                    return node
-                node.left = replace(node.left)
-                node.right = replace(node.right)
-                return node
-
-            state.plan = replace(state.plan)
-            if isinstance(state.plan, Leaf):
-                break
-    except QueryFailure as f:
-        return RunResult(cluster.timeout, plan_time, True, f.kind, stages,
-                         tot_shuffles, tot_sbytes, state.plan, bushy)
-    return RunResult(state.elapsed, plan_time, False, "", stages,
-                     tot_shuffles, tot_sbytes, state.plan, bushy)
+    run = AdaptiveRun(db, query, plan, est, cluster,
+                      max_hook_steps=max_hook_steps if hook is not None else 0,
+                      plan_time=plan_time, aqe_switching=aqe_switching)
+    st = run.start()
+    while st is not None:
+        st = run.resume(hook(st))
+    return run.result
 
 

@@ -1,0 +1,189 @@
+"""Batched rollout engine invariants: resumable AdaptiveRun == callback
+run_adaptive, seeded serial rollout == one lane of the lockstep engine
+(actions, rewards AND latencies), exactly one batched policy call per
+lockstep step (no per-lane policy_probs), batched PPO update sanity, and
+the fused VMEM-resident TreeCNN kernel vs the jnp reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import nets
+from repro.core.agent import AgentConfig, AqoraAgent
+from repro.core.encoding import MAX_NODES, WorkloadMeta
+from repro.core.rollout import rollout
+from repro.core.train_loop import train_agent
+from repro.core.vec_rollout import rollout_batch
+from repro.kernels.tree_conv import tree_cnn_fused
+from repro.sql.cluster import ClusterModel
+from repro.sql.executor import AdaptiveRun, run_adaptive
+from repro.sql.plans import syntactic_plan
+
+
+@pytest.fixture(scope="module")
+def agent(job_workload):
+    meta = WorkloadMeta.from_workload(job_workload)
+    return AqoraAgent(meta, AgentConfig(), seed=0)
+
+
+# ---------------------------------------------------------- AdaptiveRun
+def test_adaptive_run_matches_run_adaptive(job_db, job_workload, estimator):
+    for q in job_workload.test[:4]:
+        ref = run_adaptive(job_db, q, syntactic_plan(q), estimator)
+        run = AdaptiveRun(job_db, q, syntactic_plan(q), estimator,
+                          max_hook_steps=3)
+        st = run.start()
+        steps = 0
+        while st is not None:
+            steps += 1
+            st = run.resume(None)          # noop hook at every boundary
+        assert steps <= 3
+        res = run.result
+        assert res is not None and run.done
+        assert res.latency == ref.latency
+        assert res.total_shuffles == ref.total_shuffles
+        assert [s.out_rows for s in res.stages] == \
+            [s.out_rows for s in ref.stages]
+
+
+def test_adaptive_run_threads_cluster_into_state(job_db, job_workload,
+                                                 estimator):
+    cl = ClusterModel(bjt=123.0)
+    run = AdaptiveRun(job_db, job_workload.test[0],
+                      syntactic_plan(job_workload.test[0]), estimator, cl)
+    st = run.start()
+    assert st is not None and st.cluster is cl
+    # planned_shuffles must use the run's cluster, not a fresh default
+    assert isinstance(st.planned_shuffles(), int)
+
+
+# ------------------------------------------------- serial == batched lane
+def test_batched_rollout_matches_seeded_serial(job_db, job_workload,
+                                               estimator, agent):
+    qs = job_workload.test[:4]
+    seeds = [101, 202, 303, 404]
+    serial = [rollout(job_db, q, estimator, agent, stage=3, explore=True,
+                      key=s) for q, s in zip(qs, seeds)]
+    batched = rollout_batch(job_db, qs, estimator, agent, stage=3,
+                            explore=True, seeds=seeds)
+    for s, b in zip(serial, batched):
+        assert s.actions == b.actions
+        assert s.t_execute == b.t_execute
+        assert s.rewards == b.rewards
+        assert s.failed == b.failed
+        assert len(s.states) == len(b.states)
+        np.testing.assert_allclose(s.logps, b.logps, atol=1e-6)
+
+
+def test_batched_rollout_greedy_matches_serial(job_db, job_workload,
+                                               estimator, agent):
+    qs = job_workload.test[4:7]
+    serial = [rollout(job_db, q, estimator, agent, stage=3, explore=False)
+              for q in qs]
+    batched = rollout_batch(job_db, qs, estimator, agent, stage=3,
+                            explore=False)
+    for s, b in zip(serial, batched):
+        assert s.actions == b.actions and s.t_execute == b.t_execute
+
+
+# ------------------------------------------- one policy call per step
+def test_vectorized_path_batches_policy_calls(job_db, job_workload,
+                                              estimator, agent,
+                                              monkeypatch):
+    qs = job_workload.test[:4]
+    calls = {"batch": 0}
+
+    def no_serial_policy(*a, **k):
+        raise AssertionError("per-lane policy_probs in the vectorized path")
+
+    orig = agent.act_batch
+
+    def counting_act_batch(*a, **k):
+        calls["batch"] += 1
+        return orig(*a, **k)
+
+    monkeypatch.setattr(agent, "policy_probs", no_serial_policy)
+    monkeypatch.setattr(agent, "act", no_serial_policy)
+    monkeypatch.setattr(agent, "act_batch", counting_act_batch)
+    trajs = rollout_batch(job_db, qs, estimator, agent, seeds=[1, 2, 3, 4])
+    # exactly one batched call (== one device sync) per lockstep step
+    assert calls["batch"] == max(len(t.actions) for t in trajs)
+    assert all(1 <= len(t.actions) <= agent.cfg.max_steps for t in trajs)
+
+
+# ------------------------------------------------------- batched learning
+def test_ppo_update_batch_finite_and_stateful(job_db, job_workload,
+                                              estimator):
+    meta = WorkloadMeta.from_workload(job_workload)
+    ag = AqoraAgent(meta, AgentConfig(), seed=3)
+    trajs = rollout_batch(job_db, job_workload.test[:4], estimator, ag,
+                          seeds=[5, 6, 7, 8])
+    before = jax.tree_util.tree_map(lambda x: np.asarray(x), ag.actor)
+    m = ag.ppo_update_batch(trajs)
+    assert np.isfinite(m["actor_loss"]) and np.isfinite(m["critic_loss"])
+    moved = any(
+        not np.allclose(b, np.asarray(a)) for b, a in zip(
+            jax.tree_util.tree_leaves(before),
+            jax.tree_util.tree_leaves(ag.actor)))
+    assert moved, "episode-batch update must move the actor params"
+
+
+def test_train_agent_batched_runs_and_logs(job_db, job_workload, estimator):
+    agent, logs = train_agent(job_db, job_workload, episodes=8, seed=0,
+                              est=estimator, batch_size=4)
+    assert len(logs) == 8
+    assert [l.episode for l in logs] == list(range(8))
+    assert all(np.isfinite(l.actor_loss) for l in logs)
+
+
+# ------------------------------------------------------- fused TreeCNN
+@pytest.mark.parametrize("B,N,F,H,tile", [(5, 64, 27, 96, 2),
+                                          (8, 16, 8, 32, 8),
+                                          (3, 32, 12, 48, 4)])
+def test_tree_cnn_fused_matches_reference(B, N, F, H, tile):
+    rng = np.random.default_rng(hash((B, N, F, H)) % 2 ** 31)
+    feat = rng.standard_normal((B, N, F)).astype(np.float32)
+    feat[:, 0] = 0.0                                   # null slot
+    left = rng.integers(0, N, (B, N)).astype(np.int32)
+    right = rng.integers(0, N, (B, N)).astype(np.int32)
+    mask = (rng.random((B, N)) > 0.3).astype(np.float32)
+    mask[:, 0] = 0.0
+    params = nets._init_treecnn(jax.random.PRNGKey(0), F, H)
+    out = tree_cnn_fused(jnp.asarray(feat), jnp.asarray(left),
+                         jnp.asarray(right), jnp.asarray(mask), params,
+                         tile=tile, interpret=True)
+    assert out.shape == (B, H)
+    ref = np.stack([np.asarray(nets._apply_treecnn(
+        params, jnp.asarray(feat[i]), jnp.asarray(left[i]),
+        jnp.asarray(right[i]), jnp.asarray(mask[i]))) for i in range(B)])
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-4, rtol=1e-4)
+
+
+def test_apply_encoder_batched_dispatch_fused_equals_vmap():
+    rng = np.random.default_rng(9)
+    B, N, F, H = 4, 32, 10, 24
+    feat = jnp.asarray(rng.standard_normal((B, N, F)), jnp.float32)
+    left = jnp.asarray(rng.integers(0, N, (B, N)), jnp.int32)
+    right = jnp.asarray(rng.integers(0, N, (B, N)), jnp.int32)
+    mask = jnp.asarray((rng.random((B, N)) > 0.4), jnp.float32)
+    params = nets._init_treecnn(jax.random.PRNGKey(1), F, H)
+    vmapped = nets.apply_encoder(params, "treecnn", feat, left, right, mask)
+    fused = nets.apply_encoder(params, "treecnn", feat, left, right, mask,
+                               fused=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(vmapped),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_fused_agent_matches_unfused_actions(job_db, job_workload,
+                                             estimator):
+    """End to end: an agent with the fused encoder on its batched inference
+    path takes the same actions as the reference agent."""
+    meta = WorkloadMeta.from_workload(job_workload)
+    ref = AqoraAgent(meta, AgentConfig(), seed=4)
+    fus = AqoraAgent(meta, AgentConfig(fused_treecnn=True), seed=4)
+    qs = job_workload.test[:2]
+    t_ref = rollout_batch(job_db, qs, estimator, ref, seeds=[9, 10])
+    t_fus = rollout_batch(job_db, qs, estimator, fus, seeds=[9, 10])
+    for a, b in zip(t_ref, t_fus):
+        assert a.actions == b.actions
+        np.testing.assert_allclose(a.logps, b.logps, atol=1e-4)
