@@ -1,0 +1,170 @@
+"""Online serving benchmark: async lanes vs lockstep batching, plus the
+delta-table dynamic segment — feeds results/BENCH_serve.json.
+
+Segment A (straggler-heavy mix): one open-loop trace — mostly small
+dimension-join queries with a guaranteed heavy straggler (a triple
+Zipf-skewed fact join that blows past the materialize cap and eats the
+300s timeout) injected every STRAG_EVERY queries — replayed through the
+SAME agent under policy="async" and policy="lockstep". Latencies are
+virtual-clock (deterministic), so the comparison isolates scheduling:
+lockstep barriers every wave behind its slowest member, async refills
+each lane the moment it frees.
+
+Segment B (dynamic deltas): the same service with append/delete batches
+interleaved into the stream; reports the cache's hit/miss/evict/
+invalidate counters and cross-checks one post-delta query bit-for-bit
+against a cache-off run.
+
+  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+"""
+import argparse
+import time
+
+from benchmarks.common import csv_line, update_bench_json
+
+STRAG_EVERY = 8
+
+
+def _build(scale: float, seed: int = 0):
+    from repro.core.agent import AgentConfig, AqoraAgent
+    from repro.core.encoding import WorkloadMeta
+    from repro.sql import datagen, workloads
+    from repro.sql.cbo import Estimator
+
+    db = datagen.make_job_like(scale=scale, seed=seed)
+    wl = workloads.make_workload("job", n_train=48, n_test_per_template=1,
+                                 seed=7)
+    est = Estimator(db, db.stats)
+    agent = AqoraAgent(WorkloadMeta.from_workload(wl), AgentConfig(),
+                       seed=seed)
+    return db, wl, est, agent
+
+
+def _straggler():
+    from repro.sql.query import JoinCond, Query, Relation
+    return Query("straggler",
+                 (Relation("ci", "cast_info", ()),
+                  Relation("mi", "movie_info", ()),
+                  Relation("mk", "movie_keyword", ())),
+                 (JoinCond("ci", "movie_id", "mi", "movie_id"),
+                  JoinCond("ci", "movie_id", "mk", "movie_id")))
+
+
+def _mix_stream(wl, n_queries: int, rate: float, seed: int):
+    """Small-template queries with a deterministic straggler every
+    STRAG_EVERY arrivals."""
+    from repro.serve.driver import open_loop_stream
+    fast = [q for q in wl.train if q.n_relations <= 6] or wl.train
+    stream = open_loop_stream(fast, rate=rate, n_queries=n_queries,
+                              seed=seed)
+    strag = _straggler()
+    for i, a in enumerate(stream):
+        if (i + 1) % STRAG_EVERY == 0:
+            a.query = strag
+    return stream
+
+
+def bench_straggler_mix(db, wl, est, agent, *, n_queries: int, rate: float,
+                        n_lanes: int):
+    from repro.serve.service import QueryService
+
+    print(f"\n== serving: async lanes vs lockstep batching "
+          f"({n_queries} queries, 1 straggler per {STRAG_EVERY}, "
+          f"{n_lanes} lanes, open-loop {rate} qps) ==")
+    out = {}
+    for policy in ("lockstep", "async"):
+        stream = _mix_stream(wl, n_queries, rate, seed=11)
+        svc = QueryService(db, agent, est=est, n_lanes=n_lanes,
+                           policy=policy)
+        t0 = time.perf_counter()
+        _, stats = svc.run(stream)
+        host = time.perf_counter() - t0
+        out[policy] = stats
+        print(f"{policy:9s} qps={stats.qps:7.2f}  p50={stats.latency_p50:8.2f}s "
+              f"p99={stats.latency_p99:8.2f}s  makespan={stats.makespan:8.1f}s "
+              f"hit_rate={stats.cache['hit_rate']:.2f}  "
+              f"mean_batch={stats.mean_decide_batch:.1f}  host={host:.1f}s")
+    a, l = out["async"], out["lockstep"]
+    print(f"async/lockstep: qps {a.qps / l.qps:.2f}x, "
+          f"p99 {l.latency_p99 / max(a.latency_p99, 1e-9):.2f}x lower")
+    csv_line("serve_async_qps", 0, f"{a.qps:.2f}")
+    csv_line("serve_async_p99_s", 0, f"{a.latency_p99:.2f}")
+    csv_line("serve_qps_speedup_vs_lockstep", 0, f"{a.qps / l.qps:.2f}")
+    return out
+
+
+def bench_dynamic(db, wl, est, agent, *, n_queries: int, rate: float,
+                  n_lanes: int, delta_every: int, delta_rows: int):
+    from repro.serve.driver import open_loop_stream
+    from repro.serve.service import QueryService
+    from repro.sql.executor import run_adaptive
+    from repro.sql.plans import syntactic_plan
+
+    print(f"\n== serving: delta-table dynamic workload "
+          f"(delta every {delta_every} queries, +{delta_rows} rows) ==")
+    fast = [q for q in wl.train if q.n_relations <= 6] or wl.train
+    stream = open_loop_stream(fast, rate=rate, n_queries=n_queries, seed=13,
+                              delta_every=delta_every,
+                              delta_tables=("movie_info", "movie_keyword",
+                                            "cast_info"),
+                              delta_rows=delta_rows, delete_frac=0.02)
+    svc = QueryService(db, agent, est=est, n_lanes=n_lanes, policy="async")
+    _, stats = svc.run(stream)
+    cache = stats.cache
+    print(f"qps={stats.qps:7.2f}  p99={stats.latency_p99:8.2f}s  "
+          f"cache: hits={cache['hits']} misses={cache['misses']} "
+          f"evictions={cache['evictions']} "
+          f"invalidations={cache['invalidations']} "
+          f"hit_rate={cache['hit_rate']:.2f}")
+    # correctness sentinel: post-delta execution must equal a cache-off run
+    q = fast[0]
+    warm = run_adaptive(db, q, syntactic_plan(q), est)
+    cold = run_adaptive(db, q, syntactic_plan(q), est, reuse_stages=False)
+    ok = ([s.out_rows for s in warm.stages] ==
+          [s.out_rows for s in cold.stages]) and warm.latency == cold.latency
+    print(f"post-delta cache-on == cache-off: {'OK' if ok else 'MISMATCH'}")
+    csv_line("serve_dynamic_hit_rate", 0, f"{cache['hit_rate']:.3f}")
+    csv_line("serve_dynamic_invalidations", 0, cache["invalidations"])
+    return stats, ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scale for CI (seconds, not minutes)")
+    ap.add_argument("--lanes", type=int, default=8)
+    args = ap.parse_args(argv)
+    scale = 0.04 if args.smoke else 0.1
+    n_queries = 24 if args.smoke else 96
+    rate = 4.0
+
+    db, wl, est, agent = _build(scale)
+    # warm the jit caches so host timings reflect steady state
+    from repro.serve.service import QueryService
+    QueryService(db, agent, est=est, n_lanes=args.lanes).run_queries(
+        wl.train[:args.lanes])
+
+    mix = bench_straggler_mix(db, wl, est, agent, n_queries=n_queries,
+                              rate=rate, n_lanes=args.lanes)
+    dyn, ok = bench_dynamic(db, wl, est, agent,
+                            n_queries=max(n_queries // 2, 12), rate=rate,
+                            n_lanes=args.lanes,
+                            delta_every=6 if args.smoke else 10,
+                            delta_rows=2000)
+    a, l = mix["async"], mix["lockstep"]
+    p = update_bench_json({
+        "smoke": args.smoke, "n_lanes": args.lanes, "n_queries": n_queries,
+        "straggler_every": STRAG_EVERY, "rate_qps": rate,
+        "async": a.as_dict(), "lockstep": l.as_dict(),
+        "qps_speedup_async_vs_lockstep": round(a.qps / l.qps, 2),
+        "p99_ratio_lockstep_over_async":
+            round(l.latency_p99 / max(a.latency_p99, 1e-9), 2),
+        "dynamic": dyn.as_dict(),
+        "dynamic_invalidation_consistent": ok,
+    }, name="BENCH_serve.json")
+    print(f"wrote {p}")
+    return a.qps > l.qps and ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if main() else 1)

@@ -16,12 +16,13 @@ def main() -> None:
                             bench_ablation_rl, bench_ablation_strategy,
                             bench_cbo_cost, bench_delta_table, bench_dynamic,
                             bench_kernels, bench_query_perf, bench_roofline,
-                            bench_tails)
+                            bench_serve, bench_tails)
     ran, missing = [], []
-    for mod in (bench_query_perf, bench_delta_table, bench_tails,
-                bench_dynamic, bench_ablation_rl, bench_ablation_net,
-                bench_ablation_strategy, bench_ablation_actions,
-                bench_cbo_cost, bench_roofline, bench_kernels):
+    for mod in (bench_query_perf, bench_serve, bench_delta_table,
+                bench_tails, bench_dynamic, bench_ablation_rl,
+                bench_ablation_net, bench_ablation_strategy,
+                bench_ablation_actions, bench_cbo_cost, bench_roofline,
+                bench_kernels):
         name = mod.__name__.split(".")[-1]
         try:
             ok = mod.main()

@@ -12,6 +12,10 @@ not LM pre-training): a few hundred RL episodes on one CPU.
 B queries execute in lockstep, every stage boundary costs ONE batched
 policy forward, and PPO replays the whole episode-batch in one jitted
 update.
+
+--serve additionally drives the held-out queries through the online
+serving subsystem (`repro.serve`): open-loop arrivals into async lanes
+with the LRU stage cache, reporting qps / p50 / p99 / cache hit rate.
 """
 import argparse
 import time
@@ -31,6 +35,11 @@ def main():
     ap.add_argument("--scale", type=float, default=0.25)
     ap.add_argument("--batch-size", type=int, default=1,
                     help="lockstep rollout lanes (1 = serial path)")
+    ap.add_argument("--serve", action="store_true",
+                    help="also serve the test set through the async-lane "
+                         "query service and print serving metrics")
+    ap.add_argument("--lanes", type=int, default=4,
+                    help="service lanes for --serve")
     args = ap.parse_args()
 
     print("building database + workload ...")
@@ -57,6 +66,20 @@ def main():
           f"failures={fails_aq}")
     ex = next(r for r in rows if r["actions"])
     print(f"  example intervention on {ex['query']}: {ex['actions']}")
+
+    if args.serve:
+        from repro.serve.driver import open_loop_stream
+        from repro.serve.service import QueryService
+        svc = QueryService(db, agent, est=est, n_lanes=args.lanes,
+                           policy="async")
+        stream = open_loop_stream(wl.test, rate=2.0,
+                                  n_queries=3 * len(wl.test), seed=1)
+        _, stats = svc.run(stream)
+        print(f"\nonline serving ({args.lanes} async lanes, "
+              f"{stats.n_completed} queries):")
+        print(f"  qps={stats.qps:.2f} p50={stats.latency_p50:.2f}s "
+              f"p99={stats.latency_p99:.2f}s fails={stats.n_failed}")
+        print(f"  cache: {stats.cache}")
 
 
 if __name__ == "__main__":

@@ -37,7 +37,8 @@ class AgentConfig:
     curriculum: Tuple[float, float] = (0.25, 0.55)
     failure_penalty: float = 300.0     # R(τ) -= sqrt(300) on failure
     fused_treecnn: bool = False        # VMEM-resident fused kernel on the
-                                       #   batched inference path (TPU)
+                                       #   batched inference AND training
+                                       #   paths (custom VJP; TPU)
 
 
 def _node_bucket(n_used: int) -> int:
@@ -92,7 +93,7 @@ class AqoraAgent:
 
         def logits_fn_b(actor, feat, left, right, mask):
             # batched (B, N, F) encoder; may lower to the fused Pallas
-            # TreeCNN (inference-only: the Pallas kernel carries no VJP)
+            # TreeCNN (differentiable — it carries a custom VJP)
             h = nets.apply_encoder(actor["enc"], net, feat, left, right, mask,
                                    fused=fused)
             return nets.apply_mlp_head(actor["head"], h)
@@ -131,7 +132,14 @@ class AqoraAgent:
         clip, eta = self.cfg.clip, self.cfg.entropy
 
         def masked_logp(actor, feat, left, right, mask, amask):
-            lg = jax.vmap(logits_fn, (None, 0, 0, 0, 0))(actor, feat, left, right, mask)
+            # fused agents train through the fused kernel's custom VJP;
+            # the vmapped path is kept as the (numerically identical)
+            # default
+            if fused:
+                lg = logits_fn_b(actor, feat, left, right, mask)
+            else:
+                lg = jax.vmap(logits_fn, (None, 0, 0, 0, 0))(
+                    actor, feat, left, right, mask)
             lg = jnp.where(amask > 0, lg, -1e9)
             return jax.nn.log_softmax(lg, axis=-1)
 
@@ -152,9 +160,13 @@ class AqoraAgent:
             return l_clip + eta * l_ent
 
         def critic_loss(critic, sbatch):
-            v = jax.vmap(value_fn, (None, 0, 0, 0, 0))(
-                critic, sbatch["feat"], sbatch["left"], sbatch["right"],
-                sbatch["mask"])
+            if fused:
+                v = value_fn_b(critic, sbatch["feat"], sbatch["left"],
+                               sbatch["right"], sbatch["mask"])
+            else:
+                v = jax.vmap(value_fn, (None, 0, 0, 0, 0))(
+                    critic, sbatch["feat"], sbatch["left"], sbatch["right"],
+                    sbatch["mask"])
             err = (v - sbatch["v_target"]) ** 2
             return jnp.sum(err * sbatch["valid"]) / jnp.maximum(sbatch["valid"].sum(), 1.0)
 

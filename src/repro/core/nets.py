@@ -154,8 +154,9 @@ def apply_encoder(params, kind, feat, left, right, mask, *, fused=False,
 
     Batched treecnn may lower to the fused VMEM-resident Pallas kernel
     (`fused=True`) — one kernel for all three conv layers + residual +
-    masked max-pool, building child one-hots in-kernel. The fused path is
-    inference-only (no VJP); training losses keep the vmapped jnp path.
+    masked max-pool, building child one-hots in-kernel. The fused kernel
+    carries a custom VJP (backward rematerializes through the jnp
+    reference), so it serves training losses as well as rollout inference.
     """
     fn = {"treecnn": _apply_treecnn, "lstm": _apply_lstm,
           "fcnn": _apply_fcnn, "queryformer": _apply_qf}[kind]

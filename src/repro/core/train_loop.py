@@ -112,10 +112,28 @@ def train_agent(db: Database, workload: Workload, *,
 def evaluate(db: Database, queries, agent: AqoraAgent, *,
              est: Optional[Estimator] = None,
              cluster: Optional[ClusterModel] = None,
-             batch_size: int = 1) -> List[Dict]:
+             batch_size: int = 1,
+             policy: Optional[str] = None) -> List[Dict]:
+    """Run test queries with the trained policy (argmax, no exploration).
+
+    policy=None keeps the legacy paths: serial rollouts (batch_size=1) or
+    barriered lockstep chunks (batch_size>1). policy="async"/"lockstep"
+    routes the whole set through the online serving scheduler
+    (`serve.scheduler.LaneScheduler`) with batch_size lanes — per-query
+    plans and latencies are identical across all paths; only scheduling
+    (and therefore host batching) differs.
+    """
     cluster = cluster if cluster is not None else ClusterModel()
     est = est or Estimator(db, db.stats)
-    if batch_size > 1:
+    if policy is not None:
+        from repro.serve.scheduler import Arrival, LaneScheduler
+        sched = LaneScheduler(db, est, agent, n_lanes=max(batch_size, 1),
+                              stage=3, explore=False, cluster=cluster,
+                              policy=policy)
+        comps = sched.run([Arrival(0.0, query=q, seed=i)
+                           for i, q in enumerate(queries)])
+        trajs = [c.traj for c in comps]
+    elif batch_size > 1:
         trajs = []
         for i in range(0, len(queries), batch_size):
             trajs += rollout_batch(db, queries[i:i + batch_size], est, agent,

@@ -1,48 +1,30 @@
 """Vectorized rollout engine: B queries executed in lockstep (§IV at
-batch granularity — the training/inference hot path of the framework).
+batch granularity — the training hot path of the framework).
 
-Each query runs inside a resumable `sql.executor.AdaptiveRun`, suspended at
-its stage boundaries. One lockstep step:
-
-  1. encode every suspended lane's RuntimeState (host numpy) and pad the
-     batch into one (B, MAX_NODES, F) block;
-  2. ONE jitted `agent.act_batch` call — batched encoder forward (optionally
-     the fused VMEM-resident TreeCNN kernel), masked categorical sample
-     with a per-lane PRNG key advanced in-kernel, and a single device sync
-     for the whole batch (no per-lane `policy_probs` / `np.asarray`);
-  3. scatter actions back: apply Alg. 2 per lane and resume each run.
+Since the online serving subsystem landed, lockstep batching is a
+SCHEDULER POLICY, not a separate engine: `rollout_batch` admits its B
+queries as one wave into `serve.scheduler.LaneScheduler(policy=
+"lockstep")`, which per tick gathers every suspended lane into ONE jitted
+`agent.act_batch` call (masked categorical, per-lane PRNG advanced
+in-kernel, a single device sync per step), applies Alg. 2 per lane, and
+resumes each `sql.executor.AdaptiveRun` to its next stage boundary.
 
 Lanes that finish drop out of the batch (their slots are padded with a
-noop-only mask); the step repeats until every lane has produced a
-RunResult. Per-lane PRNG chains are keyed by `seeds`, and advance exactly
-like `core.rollout.rollout(..., key=seed)` — a seeded serial rollout and
-the batched engine take identical actions, so the two paths are
-interchangeable evidence-wise and differ only in throughput.
+noop-only mask); the wave barriers until every lane has produced a
+RunResult. Per-lane PRNG chains are keyed by `seeds` and advance exactly
+like `core.rollout.rollout(..., key=seed)` — a seeded serial rollout, one
+lane of this lockstep wave, and one async serving lane
+(`LaneScheduler(policy="async")`) all take identical actions, so the
+paths are interchangeable evidence-wise and differ only in scheduling.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import List, Optional, Sequence
 
-import numpy as np
-
-from repro.core.actions import action_mask, apply_action
-from repro.core.encoding import MAX_NODES, encode_state
-from repro.core.rollout import Trajectory, as_key, finalize_trajectory
+from repro.core.rollout import Trajectory
+from repro.serve.scheduler import Arrival, LaneScheduler
 from repro.sql.cbo import Estimator
 from repro.sql.cluster import ClusterModel
-from repro.sql.executor import AdaptiveRun, RuntimeState
-from repro.sql.plans import syntactic_plan
-
-
-@dataclasses.dataclass
-class _Lane:
-    run: AdaptiveRun
-    traj: Trajectory
-    state: Optional[RuntimeState]     # pending suspension (None = finished)
-    key: np.ndarray                   # uint32[2] PRNG chain head
-    extra_plan: float = 0.0
 
 
 def rollout_batch(db, queries: Sequence, est: Estimator, agent, *,
@@ -54,83 +36,13 @@ def rollout_batch(db, queries: Sequence, est: Estimator, agent, *,
     `seeds[i]` keys lane i's action sampling (defaults to 0..B-1); a serial
     `rollout(db, queries[i], ..., key=seeds[i])` reproduces lane i exactly.
     """
-    cluster = cluster if cluster is not None else ClusterModel()
-    meta = agent.meta
     B = len(queries)
     if seeds is None:
         seeds = list(range(B))
     assert len(seeds) == B, "one seed per lane"
-    batched = hasattr(agent, "act_batch")
-
-    lanes: List[_Lane] = []
-    for q, s in zip(queries, seeds):
-        run = AdaptiveRun(db, q, syntactic_plan(q), est, cluster,
-                          max_hook_steps=agent.cfg.max_steps, plan_time=0.0)
-        lane = _Lane(run, Trajectory(), None, as_key(s))
-        lane.state = run.start()
-        lanes.append(lane)
-
-    F = meta.feat_dim
-    d = agent.space.d
-    while True:
-        active = [i for i, l in enumerate(lanes) if l.state is not None]
-        if not active:
-            break
-
-        # ---- 1. gather + pad pending states into one batch
-        feat = np.zeros((B, MAX_NODES, F), np.float32)
-        left = np.zeros((B, MAX_NODES), np.int32)
-        right = np.zeros((B, MAX_NODES), np.int32)
-        mask = np.zeros((B, MAX_NODES), np.float32)
-        amask = np.zeros((B, d), np.float32)
-        amask[:, agent.space.noop_idx] = 1.0      # padded lanes sample noop
-        keys = np.zeros((B, 2), np.uint32)
-        encs = {}
-        prep_t = {}
-        for bi in active:
-            l = lanes[bi]
-            t0 = time.perf_counter()
-            enc = encode_state(l.state, meta)
-            am = action_mask(agent.space, l.state, stage=stage)
-            feat[bi], left[bi], right[bi], mask[bi] = enc
-            amask[bi] = am
-            keys[bi] = l.key
-            encs[bi] = (enc, am)
-            prep_t[bi] = time.perf_counter() - t0
-
-        # ---- 2. one jitted forward + sample, ONE device sync for all lanes
-        t0 = time.perf_counter()
-        if batched:
-            acts, logps, new_keys = agent.act_batch(
-                feat, left, right, mask, amask, keys, explore=explore)
-        else:                  # value-based agents (DQN) have no batch path
-            acts = np.zeros(B, np.int32)
-            logps = np.zeros(B, np.float32)
-            new_keys = keys
-            for bi in active:
-                a, lp = agent.act(encs[bi][0], encs[bi][1], explore=explore)
-                acts[bi], logps[bi] = a, lp
-        act_share = (time.perf_counter() - t0) / max(len(active), 1)
-
-        # ---- 3. scatter actions back, advance every lane one stage
-        for bi in active:
-            l = lanes[bi]
-            t0 = time.perf_counter()
-            enc, am = encs[bi]
-            a = int(acts[bi])
-            l.key = new_keys[bi]
-            new_plan, r, extra = apply_action(agent.space, l.state, a)
-            l.traj.states.append(enc)
-            l.traj.actions.append(a)
-            l.traj.logps.append(float(logps[bi]))
-            l.traj.masks.append(am)
-            l.traj.rewards.append(r)
-            l.traj.decoded.append(agent.space.decode(a))
-            l.extra_plan += extra
-            l.traj.hook_seconds += (prep_t[bi] + act_share
-                                    + time.perf_counter() - t0)
-            l.state = l.run.resume(new_plan)
-
-    return [finalize_trajectory(l.traj, l.run.result, q, est, agent, cluster,
-                                meta, l.extra_plan)
-            for l, q in zip(lanes, queries)]
+    sched = LaneScheduler(db, est, agent, n_lanes=B, stage=stage,
+                          explore=explore, cluster=cluster,
+                          policy="lockstep")
+    comps = sched.run([Arrival(0.0, query=q, seed=s)
+                       for q, s in zip(queries, seeds)])
+    return [c.traj for c in comps]

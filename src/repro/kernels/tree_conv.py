@@ -29,6 +29,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 
@@ -124,22 +125,10 @@ def _fused_kernel(h_ref, li_ref, ri_ref, m_ref,
     jax.lax.fori_loop(0, TB, one_tree, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def tree_cnn_fused(feat, left, right, mask, params, *, tile=8,
-                   interpret=None):
-    """Fused TreeCNN encoder: conv1..conv3 + residual + masked max-pool.
-
-    feat: (B, N, F); left/right: (B, N) int32 child indices (0 = null,
-    row 0 must be a zero row); mask: (B, N); params: the core.nets treecnn
-    dict {"conv1"|"conv2"|"conv3": {"wr","wl","wrt","b"}}. Returns (B, H)
-    pooled encodings. Only (B, N) index vectors cross HBM — the one-hot
-    matrices and all intermediate activations exist in VMEM only.
-    `interpret=None` auto-selects interpreter mode off-TPU.
-    """
+def _fused_forward(feat, left, right, mask, params, tile, interpret):
+    """Forward pallas_call for the fused encoder (no autodiff rules)."""
     B, N, F = feat.shape
     H = params["conv1"]["wr"].shape[1]
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
     TB = min(tile, B)
     Bp = ((B + TB - 1) // TB) * TB
     if Bp != B:                       # pad to a whole number of tiles; the
@@ -176,3 +165,77 @@ def tree_cnn_fused(feat, left, right, mask, params, *, tile=8,
         interpret=interpret,
     )(feat, li, ri, m, *w)
     return out[:B]
+
+
+# ------------------------------------------------- custom VJP for training
+def _ref_tree_cnn(feat, left, right, mask, params):
+    """jnp reference of the fused kernel for ONE tree — the SAME math
+    (one-hot gather == h[idx] for in-range indices, leaky_relu slope 0.01,
+    residual, masked max-pool), used to build the backward pass."""
+    m = mask[:, None]
+    h = feat * m
+
+    def layer(h, p):
+        out = (h @ p["wr"] + h[left] @ p["wl"] + h[right] @ p["wrt"]
+               + p["b"])
+        out = jnp.where(out > 0, out, 0.01 * out)
+        return out * m
+
+    h1 = layer(h, params["conv1"])
+    h2 = layer(h1, params["conv2"])
+    h3 = layer(h2, params["conv3"]) + h2
+    neg = jnp.where(m > 0, h3, -jnp.inf)
+    pooled = jnp.max(neg, axis=0)
+    return jnp.where(jnp.isfinite(pooled), pooled, 0.0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _fused_with_vjp(feat, left, right, mask, params, tile, interpret):
+    return _fused_forward(feat, left, right, mask, params, tile, interpret)
+
+
+def _fused_fwd(feat, left, right, mask, params, tile, interpret):
+    out = _fused_forward(feat, left, right, mask, params, tile, interpret)
+    return out, (feat, left, right, mask, params)
+
+
+def _fused_bwd(tile, interpret, residuals, g):
+    """Backward by rematerialization: re-run the (cheap, (B,N,H)-sized)
+    jnp reference forward and pull the cotangent through it. The fused
+    kernel keeps its VMEM-resident forward on the hot path; the backward
+    trades one extra reference forward for not spilling any intermediate
+    activations to HBM during inference."""
+    feat, left, right, mask, params = residuals
+
+    def ref(f, m, p):
+        return jax.vmap(_ref_tree_cnn, in_axes=(0, 0, 0, 0, None))(
+            f, left, right, m, p)
+
+    _, pullback = jax.vjp(ref, feat, mask, params)
+    gf, gm, gp = pullback(g)
+    zero_int = lambda x: np.zeros(x.shape, jax.dtypes.float0)
+    return gf, zero_int(left), zero_int(right), gm, gp
+
+
+_fused_with_vjp.defvjp(_fused_fwd, _fused_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def tree_cnn_fused(feat, left, right, mask, params, *, tile=8,
+                   interpret=None):
+    """Fused TreeCNN encoder: conv1..conv3 + residual + masked max-pool.
+
+    feat: (B, N, F); left/right: (B, N) int32 child indices (0 = null,
+    row 0 must be a zero row); mask: (B, N); params: the core.nets treecnn
+    dict {"conv1"|"conv2"|"conv3": {"wr","wl","wrt","b"}}. Returns (B, H)
+    pooled encodings. Only (B, N) index vectors cross HBM — the one-hot
+    matrices and all intermediate activations exist in VMEM only.
+    `interpret=None` auto-selects interpreter mode off-TPU.
+
+    Differentiable w.r.t. feat, mask and params via a custom VJP (backward
+    rematerializes through the jnp reference), so PPO training can run
+    the fused kernel — not just rollout inference.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _fused_with_vjp(feat, left, right, mask, params, tile, interpret)

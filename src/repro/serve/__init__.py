@@ -1,0 +1,70 @@
+"""Online serving subsystem: an async-lane query service on top of the
+resumable `sql.executor.AdaptiveRun` suspension points.
+
+Architecture
+------------
+Four cooperating pieces, each in its own module:
+
+  cache.py      Runtime stage/statistics cache. Replaces the executor's
+                ad-hoc clear-all dict: LRU eviction under a byte budget,
+                per-table version tags baked into every signature (so a
+                table update invalidates all derived entries in O(1) —
+                stale signatures simply never match again and age out via
+                LRU), and hit/miss/evict/invalidate counters.
+
+  scheduler.py  The async lane scheduler. A fixed pool of lanes, each
+                holding one suspended `AdaptiveRun`; at every tick,
+                whichever lanes are currently suspended at a stage
+                boundary are gathered into ONE batched policy call
+                (`agent.act_batch`) — no global barrier. Lanes join and
+                leave mid-flight; a finished lane is immediately refilled
+                from the admission queue. Completion times live on a
+                deterministic virtual clock (admission time + the run's
+                simulated latency), so serial execution (n_lanes=1) and
+                lockstep batching (policy="lockstep", the PR-1 engine)
+                remain bit-reproducible special cases of the same loop.
+
+  deltas.py     Delta-table dynamic workloads: append/delete batches that
+                mutate the live database between queries and bump the
+                per-table version, making stale cache entries provably
+                wrong if ever served. The scheduler applies a delta as a
+                write barrier: every query admitted before it drains
+                first, every query after it sees the new version.
+
+  driver.py     Streaming workload driver: open-loop (Poisson) arrivals
+                instantiated from the JOB/ExtJOB/STACK templates, with
+                optional interleaved delta batches.
+
+  service.py    Façade tying it together: `QueryService.run(stream)`
+                installs the cache, runs the scheduler, and reports
+                throughput (qps), p50/p99 latency, and cache hit rate —
+                the numbers `benchmarks/bench_serve.py` persists to
+                results/BENCH_serve.json.
+
+Imports are lazy so that `sql.executor` can depend on `serve.cache`
+without creating an import cycle through this package.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "StageCache": "repro.serve.cache",
+    "CacheStats": "repro.serve.cache",
+    "Arrival": "repro.serve.scheduler",
+    "Completion": "repro.serve.scheduler",
+    "LaneScheduler": "repro.serve.scheduler",
+    "DeltaBatch": "repro.serve.deltas",
+    "apply_delta": "repro.serve.deltas",
+    "open_loop_stream": "repro.serve.driver",
+    "QueryService": "repro.serve.service",
+    "ServiceStats": "repro.serve.service",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    target = _EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(target), name)

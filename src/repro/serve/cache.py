@@ -1,0 +1,98 @@
+"""Runtime stage-result cache: LRU under a byte budget + O(1) invalidation.
+
+Replaces the executor's original `db._stage_cache` dict, which dropped the
+ENTIRE cache whenever the byte budget overflowed. Entries are keyed by the
+stage's structural signature — which, since the signatures embed each base
+table's version tag (see `Database.table_version`), makes invalidation O(1)
+on update: bumping a table's version means every signature derived from the
+old data simply never matches again. Stale entries are not scanned or
+eagerly dropped (that would be O(entries)); they age out through normal LRU
+eviction.
+
+Only row SETS are cached. Latency, shuffle accounting and OOM checks are
+always recomputed by the executor against the current run's cluster, so
+results are bit-identical with the cache off — the invariant the
+invalidation tests pin down.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, Hashable, Optional
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    invalidations: int = 0          # table-version bumps observed
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "invalidations": self.invalidations,
+                "hit_rate": round(self.hit_rate, 4)}
+
+
+class StageCache:
+    """Byte-budgeted LRU over opaque stage entries.
+
+    The budget is on BYTES, not entry count: materialized stages can hold
+    millions of rows, so an entry cap alone would let the host grow without
+    limit over a long serving run. Oversized entries (> max_entry_bytes)
+    are never admitted — huge stages are not worth pinning.
+    """
+
+    def __init__(self, max_bytes: int = 256 * 1024 * 1024,
+                 max_entry_bytes: int = 32 * 1024 * 1024):
+        self.max_bytes = max_bytes
+        self.max_entry_bytes = max_entry_bytes
+        self.bytes = 0
+        self.stats = CacheStats()
+        self._entries: "OrderedDict[Hashable, tuple]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, sig) -> bool:
+        return sig in self._entries
+
+    def get(self, sig) -> Optional[object]:
+        slot = self._entries.get(sig)
+        if slot is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(sig)
+        self.stats.hits += 1
+        return slot[0]
+
+    def put(self, sig, entry, nbytes: int) -> bool:
+        """Insert (or refresh) `entry`; evicts LRU entries until it fits.
+        Returns False when the entry is too large to ever cache."""
+        if nbytes > self.max_entry_bytes or nbytes > self.max_bytes:
+            return False
+        old = self._entries.pop(sig, None)
+        if old is not None:
+            self.bytes -= old[1]
+        while self._entries and self.bytes + nbytes > self.max_bytes:
+            _, (_, evicted_bytes) = self._entries.popitem(last=False)
+            self.bytes -= evicted_bytes
+            self.stats.evictions += 1
+        self._entries[sig] = (entry, nbytes)
+        self.bytes += nbytes
+        return True
+
+    def note_invalidation(self, table: str) -> None:
+        """Called (via `Database.bump_version`) when a table mutates. O(1):
+        the version tag inside every signature does the actual fencing."""
+        self.stats.invalidations += 1
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.bytes = 0

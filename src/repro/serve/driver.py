@@ -1,0 +1,75 @@
+"""Streaming workload driver: open-loop arrivals for the query service.
+
+Generates a trace of `scheduler.Arrival`s — queries instantiated from the
+JOB/ExtJOB/STACK templates (or any caller-supplied query source) with
+exponential (Poisson-process) interarrival gaps, optionally interleaved
+with delta batches every `delta_every` queries so the stream exercises the
+cache's version-tag invalidation. Open-loop means arrival times never wait
+on completions: when the service falls behind, queueing delay shows up in
+the reported p50/p99 — the honest way to measure a serving system.
+
+The trace is a plain list, so the same stream can be replayed against
+different scheduling policies (async vs lockstep) for apples-to-apples
+comparisons.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Iterator, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.serve.deltas import FACT_TABLES, DeltaBatch
+from repro.serve.scheduler import Arrival
+from repro.sql import workloads
+
+
+def _query_source(source, seed: int) -> Iterator:
+    if isinstance(source, str):                  # benchmark name
+        return workloads.query_stream(source, seed=seed)
+    if hasattr(source, "__next__"):              # already a generator
+        return source
+
+    def cycle(qs):
+        i = 0
+        while True:
+            yield qs[i % len(qs)]
+            i += 1
+    return cycle(list(source))
+
+
+def open_loop_stream(source: Union[str, Iterable], *, rate: float,
+                     n_queries: int, seed: int = 0,
+                     delta_every: int = 0,
+                     delta_tables: Sequence[str] = (),
+                     delta_rows: int = 0,
+                     delete_frac: float = 0.0,
+                     start: float = 0.0) -> List[Arrival]:
+    """Build an open-loop trace: `n_queries` arrivals at `rate` qps.
+
+    source       benchmark name ("job"/"extjob"/"stack"), a query list
+                 (cycled), or a query generator.
+    delta_every  inject one DeltaBatch after every `delta_every` queries,
+                 round-robin over `delta_tables` (defaults to the
+                 benchmark's fact tables), each appending `delta_rows`
+                 rows and deleting `delete_frac` of the table.
+    """
+    rng = np.random.default_rng(seed)
+    qs = _query_source(source, seed)
+    if delta_every and not delta_tables:
+        assert isinstance(source, str), "delta_tables required for " \
+            "non-benchmark sources"
+        delta_tables = FACT_TABLES[source]
+    t = start
+    out: List[Arrival] = []
+    n_deltas = 0
+    for i in range(n_queries):
+        t += float(rng.exponential(1.0 / rate))
+        out.append(Arrival(t, query=next(qs),
+                           seed=int(rng.integers(2 ** 31))))
+        if delta_every and (i + 1) % delta_every == 0:
+            table = delta_tables[n_deltas % len(delta_tables)]
+            out.append(Arrival(t, delta=DeltaBatch(
+                table, n_append=delta_rows, delete_frac=delete_frac,
+                seed=int(rng.integers(2 ** 31)))))
+            n_deltas += 1
+    return out

@@ -1,0 +1,297 @@
+"""Async lane scheduler: a fixed pool of lanes over resumable AdaptiveRuns.
+
+Each lane holds at most one in-flight query, suspended at its next stage
+boundary. One scheduler tick:
+
+  1. admit — every idle lane is immediately refilled from the admission
+     queue (FCFS, earliest-free lane first); a delta batch at the head of
+     the queue is a write barrier: it applies once every previously
+     admitted query has drained, and every query behind it sees the new
+     table version;
+  2. gather — whichever lanes are currently suspended at a stage boundary
+     (optionally only those whose boundary falls inside a `window`-second
+     batching horizon) are padded into ONE `agent.act_batch` call;
+  3. scatter — each decided lane applies its action (Alg. 2) and resumes
+     to its next boundary or to completion. A finished lane frees at its
+     virtual completion time and is refilled on the next tick.
+
+There is NO global barrier: lanes join and leave mid-flight, and a
+straggler occupies exactly one lane while the others keep streaming.
+
+Virtual time. Queries are timed on a deterministic virtual clock: a run
+admitted at `admit_t` reaches its k-th boundary at `admit_t + elapsed_k`
+(the executor's simulated seconds) and completes at `admit_t + latency`.
+Policy decisions are free on this clock (their host cost is tracked
+separately in `Trajectory.hook_seconds`), so per-query plans, latencies
+and completion times are bit-reproducible for ANY lane count, batching
+window or scheduling policy — serial execution (n_lanes=1) and the PR-1
+lockstep engine (policy="lockstep", which admits barriered waves of
+n_lanes queries) are special cases of the same loop, and
+`core.vec_rollout.rollout_batch` is now a thin wrapper over this module.
+
+Scheduling still changes what matters for serving: under "lockstep" a
+wave's lanes all wait for the slowest member before the next wave is
+admitted, while "async" refills each lane the moment it frees — which is
+what `benchmarks/bench_serve.py` quantifies on straggler-heavy mixes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.actions import action_mask, apply_action
+from repro.core.encoding import MAX_NODES, encode_state
+from repro.core.rollout import Trajectory, as_key, finalize_trajectory
+from repro.serve.deltas import DeltaBatch, apply_delta
+from repro.sql.cbo import Estimator
+from repro.sql.cluster import ClusterModel
+from repro.sql.executor import AdaptiveRun, RunResult
+from repro.sql.plans import syntactic_plan
+
+
+@dataclasses.dataclass
+class Arrival:
+    """One item of the admission stream: a query (with its PRNG seed) or a
+    delta batch, arriving at virtual time `t`."""
+    t: float
+    query: object = None
+    seed: object = None
+    delta: Optional[DeltaBatch] = None
+    seq: int = -1                     # stream position, assigned by run()
+
+
+@dataclasses.dataclass
+class Completion:
+    seq: int
+    query: object
+    seed: object
+    arrival_t: float
+    admit_t: float
+    finish_t: float
+    lane: int
+    tick: int                         # scheduler tick at which it finished
+    traj: Trajectory
+    result: RunResult
+
+    @property
+    def latency(self) -> float:
+        """Queueing + service time on the virtual clock."""
+        return self.finish_t - self.arrival_t
+
+    @property
+    def service_t(self) -> float:
+        return self.finish_t - self.admit_t
+
+
+@dataclasses.dataclass
+class _Lane:
+    idx: int
+    free_at: float = 0.0
+    run: Optional[AdaptiveRun] = None
+    traj: Optional[Trajectory] = None
+    state: object = None              # pending RuntimeState (None = no run)
+    key: Optional[np.ndarray] = None  # uint32[2] PRNG chain head
+    extra_plan: float = 0.0
+    arrival: Optional[Arrival] = None
+    admit_t: float = 0.0
+
+    @property
+    def next_event(self) -> float:
+        """Virtual time of the pending stage boundary."""
+        return self.admit_t + self.state.elapsed
+
+
+class LaneScheduler:
+    """Admits a stream of Arrivals into `n_lanes` lanes; one batched policy
+    call per tick over every gathered suspension point.
+
+    policy   "async"    — work-conserving: finished lanes refill at once.
+             "lockstep" — barriered waves of n_lanes (the PR-1 engine).
+    window   batching horizon in virtual seconds: a tick decides only the
+             lanes suspended within `window` of the earliest pending
+             boundary (0.0 = event-ordered ticks, None = gather ALL
+             suspended lanes). Affects host batching and tick ordering
+             only — per-query plans, latencies and completion times are
+             window-independent.
+    """
+
+    def __init__(self, db, est: Estimator, agent, *, n_lanes: int = 4,
+                 stage: int = 3, explore: bool = False,
+                 cluster: Optional[ClusterModel] = None,
+                 policy: str = "async", window: Optional[float] = None,
+                 reuse_stages: bool = True):
+        assert policy in ("async", "lockstep"), policy
+        self.db, self.est, self.agent = db, est, agent
+        self.n_lanes, self.stage, self.explore = n_lanes, stage, explore
+        self.cluster = cluster if cluster is not None else ClusterModel()
+        self.policy = policy
+        self.window = None if policy == "lockstep" else window
+        self.reuse_stages = reuse_stages
+        self.lanes = [_Lane(i) for i in range(n_lanes)]
+        self.completions: List[Completion] = []
+        self.delta_log: List[tuple] = []
+        self.ticks = 0
+        self.decide_sizes: List[int] = []
+        self._write_ts = 0.0          # virtual time of the last delta apply
+
+    # ------------------------------------------------------------- driving
+    def run(self, stream: Sequence[Arrival]) -> List[Completion]:
+        """Drain `stream` (any order; stable-sorted by arrival time) and
+        return one Completion per query, in stream order."""
+        for i, a in enumerate(stream):
+            a.seq = i
+        pending = deque(sorted(stream, key=lambda a: a.t))
+        while True:
+            self._admit(pending)
+            susp = [l for l in self.lanes if l.state is not None]
+            if not susp:
+                assert not pending, "admission stalled with idle lanes"
+                break
+            t_min = min(l.next_event for l in susp)
+            horizon = np.inf if self.window is None else t_min + self.window
+            self._decide([l for l in susp if l.next_event <= horizon])
+            self.ticks += 1
+        return sorted(self.completions, key=lambda c: c.seq)
+
+    # ----------------------------------------------------------- admission
+    def _admit(self, pending: deque) -> None:
+        while pending:
+            item = pending[0]
+            if item.delta is not None:
+                # write barrier: drain every previously admitted query
+                if any(l.run is not None for l in self.lanes):
+                    return
+                pending.popleft()
+                t_apply = max([item.t] + [l.free_at for l in self.lanes])
+                counts = apply_delta(self.db, item.delta)
+                self._write_ts = t_apply
+                self.delta_log.append((t_apply, item.delta, counts))
+                continue
+            if self.policy == "lockstep":
+                if any(l.run is not None for l in self.lanes):
+                    return            # wave still in flight (barrier)
+                base = max([self._write_ts] +
+                           [l.free_at for l in self.lanes])
+                k = 0
+                while (pending and k < self.n_lanes
+                       and pending[0].delta is None):
+                    nxt = pending.popleft()
+                    self._start(self.lanes[k], nxt, max(base, nxt.t))
+                    k += 1
+                continue
+            idle = [l for l in self.lanes if l.run is None]
+            if not idle:
+                return
+            lane = min(idle, key=lambda l: (max(item.t, l.free_at), l.idx))
+            start_t = max(item.t, lane.free_at, self._write_ts)
+            # FCFS on the virtual clock: an in-flight lane frees no earlier
+            # than its current stage boundary, so only take the idle lane
+            # once no busy lane can possibly beat it — otherwise defer and
+            # let the ticks sharpen the busy lanes' lower bounds. (This is
+            # what keeps a 300s straggler's lane from swallowing queries
+            # another lane would serve within a second.)
+            busy_bound = min(
+                (max(item.t, l.next_event) for l in self.lanes
+                 if l.run is not None), default=np.inf)
+            if start_t > busy_bound:
+                return
+            pending.popleft()
+            self._start(lane, item, start_t)
+
+    def _start(self, lane: _Lane, arrival: Arrival, admit_t: float) -> None:
+        q = arrival.query
+        run = AdaptiveRun(self.db, q, syntactic_plan(q), self.est,
+                          self.cluster,
+                          max_hook_steps=self.agent.cfg.max_steps,
+                          plan_time=0.0, reuse_stages=self.reuse_stages)
+        lane.run, lane.traj = run, Trajectory()
+        lane.key = as_key(arrival.seed if arrival.seed is not None
+                          else lane.idx)
+        lane.extra_plan = 0.0
+        lane.arrival, lane.admit_t = arrival, admit_t
+        lane.state = run.start()
+        if lane.state is None:        # ran to completion with no boundary
+            self._finish(lane)
+
+    # ------------------------------------------------------------ deciding
+    def _decide(self, decide: List[_Lane]) -> None:
+        """ONE batched policy call for `decide`, then resume each lane.
+        The batch is padded to the fixed lane count so the jit cache sees
+        one batch shape regardless of how many lanes are suspended."""
+        agent, meta = self.agent, self.agent.meta
+        B, F, d = self.n_lanes, self.agent.meta.feat_dim, self.agent.space.d
+        self.decide_sizes.append(len(decide))
+        feat = np.zeros((B, MAX_NODES, F), np.float32)
+        left = np.zeros((B, MAX_NODES), np.int32)
+        right = np.zeros((B, MAX_NODES), np.int32)
+        mask = np.zeros((B, MAX_NODES), np.float32)
+        amask = np.zeros((B, d), np.float32)
+        amask[:, agent.space.noop_idx] = 1.0   # padded slots sample noop
+        keys = np.zeros((B, 2), np.uint32)
+        encs, prep_t = {}, {}
+        for lane in decide:
+            bi = lane.idx
+            t0 = time.perf_counter()
+            enc = encode_state(lane.state, meta)
+            am = action_mask(agent.space, lane.state, stage=self.stage)
+            feat[bi], left[bi], right[bi], mask[bi] = enc
+            amask[bi] = am
+            keys[bi] = lane.key
+            encs[bi] = (enc, am)
+            prep_t[bi] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        if hasattr(agent, "act_batch"):
+            acts, logps, new_keys = agent.act_batch(
+                feat, left, right, mask, amask, keys, explore=self.explore)
+        else:                  # value-based agents (DQN) have no batch path
+            acts = np.zeros(B, np.int32)
+            logps = np.zeros(B, np.float32)
+            new_keys = keys
+            for lane in decide:
+                a, lp = agent.act(encs[lane.idx][0], encs[lane.idx][1],
+                                  explore=self.explore)
+                acts[lane.idx], logps[lane.idx] = a, lp
+        act_share = (time.perf_counter() - t0) / max(len(decide), 1)
+
+        for lane in decide:
+            bi = lane.idx
+            t0 = time.perf_counter()
+            enc, am = encs[bi]
+            a = int(acts[bi])
+            lane.key = new_keys[bi]
+            new_plan, r, extra = apply_action(agent.space, lane.state, a)
+            lane.traj.states.append(enc)
+            lane.traj.actions.append(a)
+            lane.traj.logps.append(float(logps[bi]))
+            lane.traj.masks.append(am)
+            lane.traj.rewards.append(r)
+            lane.traj.decoded.append(agent.space.decode(a))
+            lane.extra_plan += extra
+            lane.traj.hook_seconds += (prep_t[bi] + act_share
+                                       + time.perf_counter() - t0)
+            lane.state = lane.run.resume(new_plan)
+            if lane.state is None:
+                self._finish(lane)
+
+    # ----------------------------------------------------------- finishing
+    def _finish(self, lane: _Lane) -> None:
+        res = lane.run.result
+        arr = lane.arrival
+        traj = finalize_trajectory(lane.traj, res, arr.query, self.est,
+                                   self.agent, self.cluster, self.agent.meta,
+                                   lane.extra_plan)
+        # virtual completion: simulated execution seconds only — the policy
+        # decision cost is a host metric (traj.hook_seconds / C_plan), kept
+        # off the clock so completion times are bit-reproducible
+        finish_t = lane.admit_t + res.latency
+        self.completions.append(Completion(
+            seq=arr.seq, query=arr.query, seed=arr.seed, arrival_t=arr.t,
+            admit_t=lane.admit_t, finish_t=finish_t, lane=lane.idx,
+            tick=self.ticks, traj=traj, result=res))
+        lane.free_at = finish_t
+        lane.run = lane.state = lane.arrival = None

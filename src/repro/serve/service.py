@@ -1,0 +1,110 @@
+"""Service façade: one object that owns the cache, the scheduler and the
+serving metrics.
+
+`QueryService` installs a fresh `StageCache` on the database (so every
+service instance starts with cold, independently-budgeted cache state),
+runs an arrival stream through a `LaneScheduler`, and distills the
+completions into the numbers a serving benchmark cares about: throughput
+(qps on the virtual clock), p50/p99 query latency (queueing + execution),
+cache hit rate, and the host-side cost of the policy (decision batches per
+tick, hook seconds per query).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.cache import StageCache
+from repro.serve.scheduler import Arrival, Completion, LaneScheduler
+from repro.sql.cbo import Estimator
+from repro.sql.cluster import ClusterModel
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    n_completed: int
+    n_failed: int
+    makespan: float                  # first arrival -> last completion (s)
+    qps: float
+    latency_mean: float              # arrival -> completion, virtual secs
+    latency_p50: float
+    latency_p99: float
+    service_mean: float              # admission -> completion (no queueing)
+    cache: Optional[Dict[str, float]]
+    ticks: int
+    mean_decide_batch: float
+    hook_seconds: float              # total host-side policy cost
+
+    def as_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        for k, v in d.items():
+            if isinstance(v, float):
+                d[k] = round(v, 4)
+        return d
+
+
+class QueryService:
+    """Online query service over a database + trained (or cold) agent."""
+
+    def __init__(self, db, agent, *, est: Optional[Estimator] = None,
+                 cluster: Optional[ClusterModel] = None, n_lanes: int = 8,
+                 policy: str = "async", window: Optional[float] = None,
+                 cache_bytes: int = 256 * 1024 * 1024,
+                 reuse_stages: bool = True):
+        self.db = db
+        self.agent = agent
+        self.est = est if est is not None else Estimator(db, db.stats)
+        self.cluster = cluster if cluster is not None else ClusterModel()
+        self.n_lanes, self.policy, self.window = n_lanes, policy, window
+        self.reuse_stages = reuse_stages
+        if reuse_stages:
+            self.cache = StageCache(max_bytes=cache_bytes)
+            db._stage_cache = self.cache     # shared by every AdaptiveRun
+        else:
+            self.cache = None
+        self.scheduler: Optional[LaneScheduler] = None
+
+    def run(self, stream: Sequence[Arrival]) \
+            -> Tuple[List[Completion], ServiceStats]:
+        """Serve `stream` to completion; returns (completions, stats)."""
+        self.scheduler = LaneScheduler(
+            self.db, self.est, self.agent, n_lanes=self.n_lanes,
+            explore=False, cluster=self.cluster, policy=self.policy,
+            window=self.window, reuse_stages=self.reuse_stages)
+        comps = self.scheduler.run(list(stream))
+        return comps, self._stats(comps)
+
+    def run_queries(self, queries: Sequence, *, seeds=None) \
+            -> Tuple[List[Completion], ServiceStats]:
+        """Closed batch convenience: all queries arrive at t=0."""
+        if seeds is None:
+            seeds = range(len(queries))
+        return self.run([Arrival(0.0, query=q, seed=s)
+                         for q, s in zip(queries, seeds)])
+
+    def _stats(self, comps: List[Completion]) -> ServiceStats:
+        sched = self.scheduler
+        if not comps:
+            return ServiceStats(0, 0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0,
+                                self.cache.stats.as_dict() if self.cache
+                                else None, sched.ticks, 0.0, 0.0)
+        lat = np.asarray([c.latency for c in comps])
+        first = min(c.arrival_t for c in comps)
+        makespan = max(c.finish_t for c in comps) - first
+        return ServiceStats(
+            n_completed=len(comps),
+            n_failed=sum(c.result.failed for c in comps),
+            makespan=makespan,
+            qps=len(comps) / max(makespan, 1e-9),
+            latency_mean=float(lat.mean()),
+            latency_p50=float(np.percentile(lat, 50)),
+            latency_p99=float(np.percentile(lat, 99)),
+            service_mean=float(np.mean([c.service_t for c in comps])),
+            cache=self.cache.stats.as_dict() if self.cache else None,
+            ticks=sched.ticks,
+            mean_decide_batch=float(np.mean(sched.decide_sizes))
+            if sched.decide_sizes else 0.0,
+            hook_seconds=float(sum(c.traj.hook_seconds for c in comps)),
+        )

@@ -58,9 +58,27 @@ class Database:
     name: str
     tables: Dict[str, Table]
     stats: Optional[Stats] = None
+    # per-table data versions: bumped by delta application (serve.deltas);
+    # stage-cache signatures embed these tags, so a bump invalidates every
+    # cached stage derived from the old data in O(1). `stats` is NOT
+    # refreshed on a bump — stale optimizer statistics over fresh data is
+    # the paper's dynamic-evaluation premise.
+    versions: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def table(self, name: str) -> Table:
         return self.tables[name]
+
+    def table_version(self, name: str) -> int:
+        return self.versions.get(name, 0)
+
+    def bump_version(self, name: str) -> int:
+        """Record that `name`'s data changed; notifies an attached stage
+        cache (if any) so invalidations are observable in its counters."""
+        self.versions[name] = self.versions.get(name, 0) + 1
+        cache = getattr(self, "_stage_cache", None)
+        if cache is not None and hasattr(cache, "note_invalidation"):
+            cache.note_invalidation(name)
+        return self.versions[name]
 
 
 def analyze(db: Database, sample_frac: float = 0.05,

@@ -115,6 +115,25 @@ def make_job_like(scale: float = 1.0, seed: int = 0,
     return db
 
 
+def delta_rows(table: Table, n: int,
+               rng: np.random.Generator) -> Dict[str, np.ndarray]:
+    """Fresh rows for a delta-table append, shaped like the table's current
+    contents: non-key columns are bootstrap-resampled from the existing
+    rows (preserving the Zipf skew and keeping every FK pointing at a live
+    parent), while dense `id` primary keys extend past the current max so
+    appended dimension rows stay unique."""
+    cols: Dict[str, np.ndarray] = {}
+    for name, arr in table.columns.items():
+        if name == "id":
+            start = int(arr.max()) + 1 if len(arr) else 0
+            cols[name] = np.arange(start, start + n, dtype=arr.dtype)
+        elif len(arr):
+            cols[name] = rng.choice(arr, size=n)
+        else:
+            cols[name] = np.zeros(n, arr.dtype)
+    return cols
+
+
 def make_stack_like(scale: float = 1.0, seed: int = 1) -> Database:
     """10-table StackExchange-like schema."""
     rng = np.random.default_rng(seed)

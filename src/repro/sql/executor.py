@@ -21,6 +21,7 @@ from typing import Callable, Dict, Generator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serve.cache import StageCache
 from repro.sql.catalog import Database
 from repro.sql.cbo import Estimator
 from repro.sql.cluster import ClusterModel
@@ -109,53 +110,57 @@ def _needed_cols(query: Query, alias: str) -> List[str]:
 
 class Executor:
     """Stage executor with cross-run stage reuse (Spark's ReuseExchange,
-    lifted across episodes): scans and join ROW SETS are deterministic
-    given (table, filters, conds), so repeated executions of the same
-    query — the training loop replays its workload every episode — skip
+    lifted across episodes and live queries): scans and join ROW SETS are
+    deterministic given (table@version, filters, conds), so repeated
+    executions of the same query — the training loop replays its workload
+    every episode; the serving layer sees repeated template hits — skip
     the numpy work and only re-charge the modeled latency. Latency,
     shuffle accounting and OOM checks are always recomputed against THIS
-    run's cluster, so results are bit-identical with the cache off."""
+    run's cluster, so results are bit-identical with the cache off.
 
-    _CACHE_MAX_BYTES = 256 * 1024 * 1024   # per-db budget; cleared beyond
-    _ENTRY_MAX_BYTES = 32 * 1024 * 1024    # huge stages are not worth pinning
+    The cache itself is a `serve.cache.StageCache` shared via the database
+    object: LRU eviction under a byte budget, and every signature embeds
+    the base tables' version tags, so delta-table updates invalidate
+    derived entries in O(1)."""
+
+    _CACHE_MAX_BYTES = 256 * 1024 * 1024   # default budget for auto-created
+    _ENTRY_MAX_BYTES = 32 * 1024 * 1024    #   caches; huge stages not pinned
 
     def __init__(self, db: Database, cluster: Optional[ClusterModel] = None,
                  reuse_stages: bool = True):
         self.db = db
         self.cluster = cluster if cluster is not None else ClusterModel()
         if reuse_stages:
-            if not hasattr(db, "_stage_cache"):
-                db._stage_cache = {}
-                db._stage_cache_bytes = 0
-            self._cache = db._stage_cache
+            cache = getattr(db, "_stage_cache", None)
+            if not isinstance(cache, StageCache):
+                cache = StageCache(self._CACHE_MAX_BYTES,
+                                   self._ENTRY_MAX_BYTES)
+                db._stage_cache = cache
+            self._cache = cache
         else:
             self._cache = None
 
-    def _cache_put(self, sig, cols: Dict, entry) -> None:
-        """Insert bounded by BYTES, not entry count: materialized stages
-        can hold millions of rows, so an entry cap alone would let the
-        host grow without limit over a long training run."""
-        nbytes = sum(v.nbytes for v in cols.values())
-        if nbytes > self._ENTRY_MAX_BYTES:
-            return
-        if self.db._stage_cache_bytes + nbytes > self._CACHE_MAX_BYTES:
-            self._cache.clear()
-            self.db._stage_cache_bytes = 0
-        self._cache[sig] = entry
-        self.db._stage_cache_bytes += nbytes
+    @property
+    def cache_stats(self):
+        """hit/miss/evict/invalidate counters of the attached stage cache
+        (`serve.cache.CacheStats`), or None when reuse is off."""
+        return None if self._cache is None else self._cache.stats
 
     # -------------------------------------------------- base scan
     def scan(self, query: Query, alias: str) -> Tuple[MaterializedRel, float]:
         rel = query.relation(alias)
         t = self.db.table(rel.table)
         need = tuple(_needed_cols(query, alias))
-        sig = ("s", alias, rel.table, rel.filters, need)
+        sig = ("s", alias, rel.table, rel.filters, need,
+               self.db.table_version(rel.table))
         secs = self.cluster.scan_time(t.bytes())
-        if self._cache is not None and sig in self._cache:
-            cols, nrows = self._cache[sig]
-            width = 8.0 * max(1, t.ncols)
-            return MaterializedRel(frozenset([alias]), dict(cols), nrows,
-                                   width, sig=sig), secs
+        if self._cache is not None:
+            hit = self._cache.get(sig)
+            if hit is not None:
+                cols, nrows = hit
+                width = 8.0 * max(1, t.ncols)
+                return MaterializedRel(frozenset([alias]), dict(cols), nrows,
+                                       width, sig=sig), secs
         mask = np.ones(t.nrows, bool)
         for f in rel.filters:
             mask &= f.apply(t.columns[f.column])
@@ -170,7 +175,8 @@ class Executor:
         m = MaterializedRel(frozenset([alias]), cols, len(idx), width,
                             sig=sig)
         if self._cache is not None:
-            self._cache_put(sig, cols, (dict(cols), len(idx)))
+            nbytes = sum(v.nbytes for v in cols.values())
+            self._cache.put(sig, (dict(cols), len(idx)), nbytes)
         return m, secs
 
     # -------------------------------------------------- join stage
@@ -220,8 +226,9 @@ class Executor:
                                   len(lidx), left.width + right.width,
                                   sig=sig)
             if sig is not None:
-                self._cache_put(sig, out_cols,
-                                (dict(out_cols), len(lidx), pre_total))
+                nbytes = sum(v.nbytes for v in out_cols.values())
+                self._cache.put(sig, (dict(out_cols), len(lidx), pre_total),
+                                nbytes)
 
         # ---- latency + shuffle accounting
         shuffles = 0
@@ -362,7 +369,8 @@ class AdaptiveRun:
                  cluster: Optional[ClusterModel] = None,
                  max_hook_steps: int = 3,
                  plan_time: float = 0.0,
-                 aqe_switching: bool = True):
+                 aqe_switching: bool = True,
+                 reuse_stages: bool = True):
         self.cluster = cluster if cluster is not None else ClusterModel()
         self.query = query
         self.max_hook_steps = max_hook_steps
@@ -371,7 +379,7 @@ class AdaptiveRun:
         self.state = RuntimeState(query, copy_plan(plan), {}, est, 0, 0.0, 0,
                                   self.cluster)
         self.result: Optional[RunResult] = None
-        self._ex = Executor(db, self.cluster)
+        self._ex = Executor(db, self.cluster, reuse_stages=reuse_stages)
         self._stages: List[StageRecord] = []
         self._tot_shuffles = 0
         self._tot_sbytes = 0.0
@@ -514,7 +522,8 @@ def run_adaptive(db: Database, query: Query, plan: Node, est: Estimator,
                  hook: Optional[HookFn] = None,
                  max_hook_steps: int = 3,
                  plan_time: float = 0.0,
-                 aqe_switching: bool = True) -> RunResult:
+                 aqe_switching: bool = True,
+                 reuse_stages: bool = True) -> RunResult:
     """Execute `plan` stage-by-stage with AQE + optional extension hook.
 
     The hook is invoked at stage boundaries (including once pre-execution,
@@ -524,7 +533,8 @@ def run_adaptive(db: Database, query: Query, plan: Node, est: Estimator,
     """
     run = AdaptiveRun(db, query, plan, est, cluster,
                       max_hook_steps=max_hook_steps if hook is not None else 0,
-                      plan_time=plan_time, aqe_switching=aqe_switching)
+                      plan_time=plan_time, aqe_switching=aqe_switching,
+                      reuse_stages=reuse_stages)
     st = run.start()
     while st is not None:
         st = run.resume(hook(st))

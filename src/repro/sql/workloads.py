@@ -255,6 +255,20 @@ _BENCH = {"job": _job_templates, "extjob": _extjob_templates,
           "stack": _stack_templates}
 
 
+def query_stream(bench: str, seed: int = 0):
+    """Endless generator of fresh template instantiations (round-robin over
+    the benchmark's templates) — the unbounded query source the online
+    serving driver (`serve.driver`) feeds from."""
+    templates = _BENCH[bench]()
+    rng = np.random.default_rng(seed)
+    i = 0
+    while True:
+        tname, fn = templates[i % len(templates)]
+        rels, conds = _shuffle_relations(*fn(rng), rng)
+        yield Query(f"{bench}/{tname}#st{i}", rels, conds)
+        i += 1
+
+
 def make_workload(bench: str, n_train: int = 200, n_test_per_template: int = 2,
                   seed: int = 7) -> Workload:
     templates = _BENCH[bench]()
