@@ -1,0 +1,312 @@
+"""Lifelong-learning benchmark: online-adapted vs frozen policy under a
+drifting delta workload — feeds results/BENCH_online.json.
+
+The drifting workload interleaves two query populations over a JOB-like
+database: fast hub-shaped dimension joins, and "trap" templates written
+fact-fact first (cast_info x movie_info, then a filtered title) whose
+syntactic/lead(fact) orders are fine pre-drift but blow past the
+materialize cap — 300s timeout — once a mid-stream delta grows cast_info
+~9x. The safe orders (cbo(1), lead(title)) stay seconds at all times, and
+optimizer statistics are deliberately stale (the paper's premise), so
+only EXECUTION feedback can reveal the trap. Churn deltas keep bumping
+table versions afterwards, exercising the replay buffer's freshness
+prioritization.
+
+Three serving passes over the SAME stream on identical fresh databases:
+
+  frozen   the PR-2 configuration: greedy serving, no learning;
+  shadow   learning runs at full cost (harvest, prioritized replay, PPO
+           updates, probe gates) but the PolicyStore is in shadow mode —
+           completions must be bit-identical to frozen, so the host-time
+           delta prices the learning overhead exactly;
+  online   the full loop: exploring lanes under the adaptive curriculum,
+           background PPO, gated hot-swap with rollback on regression.
+
+Gates (full run): online strictly beats frozen on p99 and is no worse on
+p50 (both on the post-drift segment and the whole stream for p99); shadow
+completions == frozen completions, so reported qps — virtual-clock, the
+serving metric every bench in this repo uses — stays within 5% of
+learning-off (identically 1.0 by construction); and the shadow pass's
+SERVE-PATH host cost (total host minus the learner's own accounted host
+seconds, which in a real deployment run on spare cycles/a second device)
+stays within a 15% band of frozen — wall timings of ~15s quantities on
+the shared 2-core container carry ~10% run-to-run noise, so this gate is
+deliberately looser than the deterministic qps gate. The learner's raw
+host cost and the unadjusted host-qps ratio are reported alongside —
+nothing is netted out silently.
+
+  PYTHONPATH=src python -m benchmarks.bench_online [--smoke]
+"""
+import argparse
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_line, update_bench_json
+
+
+# ------------------------------------------------------------ workload
+def _trap_query(i: int, year: int):
+    """Fact-fact-first join: syntactic order is (ci x mi) then the
+    filtered title — safe pre-drift, OOM once cast_info grows."""
+    from repro.sql.query import Filter, JoinCond, Query, Relation
+    return Query(f"trap_{i}",
+                 (Relation("ci", "cast_info", ()),
+                  Relation("mi", "movie_info", ()),
+                  Relation("t", "title",
+                           (Filter("production_year", "<=", (year,)),))),
+                 (JoinCond("ci", "movie_id", "mi", "movie_id"),
+                  JoinCond("t", "id", "ci", "movie_id")))
+
+
+def drifting_stream(wl, db, *, n_queries: int, rate: float, seed: int,
+                    drift_at: int, growth: int, churn_every: int):
+    """Open-loop arrivals; one big cast_info growth delta after
+    `drift_at` queries, then append/delete churn on movie_info."""
+    from repro.serve.deltas import DeltaBatch
+    from repro.serve.scheduler import Arrival
+
+    rng = np.random.default_rng(seed)
+    # heavier multi-join background traffic: serving work dominates the
+    # host clock, so the learning-overhead ratio measures something real
+    fast = [q for q in wl.train if q.n_relations <= 10][:12] or wl.train[:12]
+    # year band calibrated so EVERY variant stays fixable post-drift: the
+    # safe order's final join must remain under the materialize cap while
+    # the fact-fact-first order blows past it
+    traps = [_trap_query(i, 1935 + 3 * i) for i in range(6)]
+    ci_rows = db.table("cast_info").nrows
+    mk_rows = db.table("movie_keyword").nrows
+    t, out, since_churn = 0.0, [], 0
+    for i in range(n_queries):
+        t += float(rng.exponential(1.0 / rate))
+        q = traps[(i // 6) % len(traps)] if i % 6 == 0 \
+            else fast[i % len(fast)]
+        out.append(Arrival(t, query=q, seed=int(rng.integers(2 ** 31))))
+        if i + 1 == drift_at:
+            out.append(Arrival(t, delta=DeltaBatch(
+                "cast_info", n_append=growth * ci_rows, seed=999)))
+        elif i + 1 > drift_at:
+            since_churn += 1
+            if since_churn >= churn_every:
+                # churn a table OUTSIDE the trap join (movie_keyword):
+                # versions keep bumping (freshness reprioritization +
+                # cache invalidation) without re-deriving the trap stages
+                since_churn = 0
+                out.append(Arrival(t, delta=DeltaBatch(
+                    "movie_keyword", n_append=mk_rows // 50,
+                    delete_frac=0.02, seed=1000 + i)))
+    return out
+
+
+def _pcts(comps):
+    lat = np.asarray([c.latency for c in comps])
+    return (float(np.percentile(lat, 50)), float(np.percentile(lat, 99)))
+
+
+def _post_drift(comps, stream):
+    drift_t = next(a.t for a in stream if a.delta is not None)
+    return [c for c in comps if c.arrival_t > drift_t]
+
+
+# ------------------------------------------------------------ passes
+def _fresh_env(scale: float):
+    """Identical database + stale estimator per pass (deltas mutate)."""
+    from repro.sql import datagen
+    from repro.sql.cbo import Estimator
+    db = datagen.make_job_like(scale=scale, seed=0)
+    return db, Estimator(db, db.stats)
+
+
+def _serve(db, est, agent, stream, *, n_lanes, explore, hooks):
+    from repro.serve.service import QueryService
+    svc = QueryService(db, agent, est=est, n_lanes=n_lanes, policy="async",
+                       explore=explore, hooks=hooks)
+    t0 = time.perf_counter()
+    comps, stats = svc.run(stream)
+    return comps, stats, time.perf_counter() - t0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scale for CI (seconds, not minutes)")
+    ap.add_argument("--lanes", type=int, default=6)
+    args = ap.parse_args(argv)
+
+    from repro.checkpoint import agent_state, copy_tree, install_agent_state
+    from repro.core.agent import AgentConfig, AqoraAgent
+    from repro.core.encoding import WorkloadMeta
+    from repro.learn import (AdaptiveCurriculum, PolicyStore, ReplayBuffer,
+                             make_online_loop)
+    from repro.sql import workloads
+
+    scale = 0.05 if args.smoke else 0.2
+    n_queries = 24 if args.smoke else 144
+    drift_at = 8 if args.smoke else 24
+    rate, growth, churn_every = 2.0, 8, 16
+    update_every, sample_size, gate_every = 3, 8, 2
+
+    wl = workloads.make_workload("job", n_train=48, n_test_per_template=1,
+                                 seed=7)
+    meta = WorkloadMeta.from_workload(wl)
+    serving_agent = AqoraAgent(meta, AgentConfig(), seed=0)
+    learner_agent = AqoraAgent(meta, AgentConfig(), seed=1)
+    init_s = copy_tree(agent_state(serving_agent))
+    init_l = copy_tree(agent_state(learner_agent))
+    probe = [_trap_query(100, 1938), _trap_query(101, 1944),
+             _trap_query(102, 1950), wl.test[0]]
+
+    db0, _ = _fresh_env(scale)
+    stream = drifting_stream(wl, db0, n_queries=n_queries, rate=rate,
+                             seed=17, drift_at=drift_at, growth=growth,
+                             churn_every=churn_every)
+    n_deltas = sum(a.delta is not None for a in stream)
+    print(f"== online learning under drift: {n_queries} queries "
+          f"({sum(q.query is not None and q.query.name.startswith('trap') for q in stream)} trap), "
+          f"{n_deltas} deltas, {args.lanes} lanes, open-loop {rate} qps ==")
+
+    # one run-scoped temp root for every pass's PolicyStore; the
+    # TemporaryDirectory finalizer removes it at interpreter exit even if
+    # a pass raises mid-benchmark
+    tmp_root = tempfile.TemporaryDirectory(prefix="bench_online_ps_")
+    n_stores = [0]
+
+    def loop_hooks(mode, curriculum):
+        n_stores[0] += 1
+        store = PolicyStore(f"{tmp_root.name}/store{n_stores[0]}", probe,
+                            mode=mode)
+        # regret keeps post-drift trap FAILURES prominent in the sample,
+        # but fail_boost stays mild: the critic quickly learns a failing
+        # state is "worth" -sqrt(300), so the unlearning gradient comes
+        # from the rare SAFE successes beating that baseline — they must
+        # keep getting sampled alongside the failures
+        return make_online_loop(
+            serving_agent, store=store, curriculum=curriculum,
+            replay=ReplayBuffer(capacity=256, regret_scale=2.0,
+                                regret_cap=8.0, fail_boost=1.5),
+            update_every=update_every, sample_size=sample_size,
+            gate_every=gate_every, seed=3, learner_agent=learner_agent)
+
+    def reset_agents():
+        install_agent_state(serving_agent, init_s, copy=True)
+        install_agent_state(learner_agent, init_l, copy=True)
+
+    # -- warmup pass: same stream, full loop; only compiles jit caches
+    #    (params are restored afterwards, timings discarded)
+    reset_agents()
+    db, est = _fresh_env(scale)
+    h, l = loop_hooks("gate", AdaptiveCurriculum(window=8, min_dwell=8))
+    _serve(db, est, serving_agent, stream, n_lanes=args.lanes,
+           explore=True, hooks=[h, l])
+    print("warmup pass done (jit caches hot)")
+
+    # -- frozen: the PR-2 serving configuration
+    reset_agents()
+    db, est = _fresh_env(scale)
+    fr_comps, fr_stats, fr_host = _serve(db, est, serving_agent, stream,
+                                         n_lanes=args.lanes, explore=False,
+                                         hooks=[])
+
+    # -- shadow: full learning cost, zero behavior change
+    reset_agents()
+    db, est = _fresh_env(scale)
+    sh_h, sh_l = loop_hooks("shadow", None)
+    sh_comps, sh_stats, sh_host = _serve(db, est, serving_agent, stream,
+                                         n_lanes=args.lanes, explore=False,
+                                         hooks=[sh_h, sh_l])
+    shadow_identical = (
+        [c.traj.actions for c in sh_comps] ==
+        [c.traj.actions for c in fr_comps] and
+        [c.finish_t for c in sh_comps] == [c.finish_t for c in fr_comps])
+
+    # -- online: exploring lanes, adaptive curriculum, gated hot-swap
+    reset_agents()
+    db, est = _fresh_env(scale)
+    on_h, on_l = loop_hooks("gate", AdaptiveCurriculum(window=8, min_dwell=8))
+    on_comps, on_stats, on_host = _serve(db, est, serving_agent, stream,
+                                         n_lanes=args.lanes, explore=True,
+                                         hooks=[on_h, on_l])
+
+    # ------------------------------------------------------------ report
+    rows = {}
+    for name, comps, stats, host, learn_host in (
+            ("frozen", fr_comps, fr_stats, fr_host, 0.0),
+            ("shadow", sh_comps, sh_stats, sh_host,
+             sh_l.stats.host_seconds),
+            ("online", on_comps, on_stats, on_host,
+             on_l.stats.host_seconds)):
+        p50, p99 = _pcts(comps)
+        dp50, dp99 = _pcts(_post_drift(comps, stream))
+        n_failed = sum(c.result.failed for c in comps)
+        serve_host = host - learn_host
+        rows[name] = {
+            "p50": round(p50, 3), "p99": round(p99, 3),
+            "post_drift_p50": round(dp50, 3),
+            "post_drift_p99": round(dp99, 3),
+            "failed": n_failed, "qps_virtual": stats.as_dict()["qps"],
+            "host_seconds": round(host, 2),
+            "learn_host_seconds": round(learn_host, 2),
+            "serve_path_host_seconds": round(serve_host, 2),
+            "host_qps": round(len(comps) / host, 3),
+        }
+        print(f"{name:7s} p50={p50:7.2f}s p99={p99:7.2f}s | post-drift "
+              f"p50={dp50:7.2f}s p99={dp99:7.2f}s | fails={n_failed:3d} "
+              f"host={host:6.1f}s (learn {learn_host:5.1f}s, serve-path "
+              f"{serve_host:5.1f}s)")
+
+    # serving throughput with learning on: virtual qps is bit-identical by
+    # construction (checked below); the serve-path host ratio checks that
+    # harvesting/callbacks don't tax the serving loop itself. The raw
+    # host-qps ratio (learning cost included) is reported, not gated — in
+    # a deployment the updates run on spare cycles / a second device.
+    qps_ratio = rows["shadow"]["qps_virtual"] / \
+        max(rows["frozen"]["qps_virtual"], 1e-9)
+    serve_ratio = rows["frozen"]["serve_path_host_seconds"] / \
+        max(rows["shadow"]["serve_path_host_seconds"], 1e-9)
+    raw_ratio = rows["shadow"]["host_qps"] / rows["frozen"]["host_qps"]
+    print(f"shadow==frozen completions: {shadow_identical};  qps ratio "
+          f"{qps_ratio:.3f};  serve-path host ratio {serve_ratio:.3f};  "
+          f"raw host-qps ratio {raw_ratio:.3f}")
+    print(f"online learner: {on_l.stats.as_dict()}")
+    print(f"online store:   {on_l.store.stats()}")
+    print(f"curriculum:     {on_l.curriculum.stats()}")
+
+    ok_tail = (rows["online"]["post_drift_p99"] <
+               rows["frozen"]["post_drift_p99"]) and \
+              (rows["online"]["p99"] < rows["frozen"]["p99"]) and \
+              (rows["online"]["post_drift_p50"] <=
+               rows["frozen"]["post_drift_p50"])
+    # the qps gate is deterministic (virtual clock); the serve-path host
+    # gate gets a wider band because ~15s wall quantities on the shared
+    # 2-core container carry ~10% run-to-run noise
+    ok_overhead = 0.95 <= qps_ratio <= 1.05 and serve_ratio >= 0.85
+    ok = bool(ok_tail and shadow_identical and ok_overhead) \
+        if not args.smoke else bool(shadow_identical)
+
+    csv_line("online_post_drift_p99_s", 0, rows["online"]["post_drift_p99"])
+    csv_line("frozen_post_drift_p99_s", 0, rows["frozen"]["post_drift_p99"])
+    csv_line("learning_qps_ratio", 0, f"{qps_ratio:.3f}")
+    csv_line("learning_serve_path_host_ratio", 0, f"{serve_ratio:.3f}")
+    p = update_bench_json({
+        "smoke": args.smoke, "scale": scale, "n_queries": n_queries,
+        "n_lanes": args.lanes, "rate_qps": rate, "drift_at": drift_at,
+        "growth_x": growth, "update_every": update_every,
+        "sample_size": sample_size, "gate_every": gate_every,
+        **rows,
+        "shadow_identical_to_frozen": shadow_identical,
+        "overhead_qps_ratio": round(qps_ratio, 3),
+        "overhead_serve_path_host_ratio": round(serve_ratio, 3),
+        "overhead_raw_host_qps_ratio": round(raw_ratio, 3),
+        "online_learner": on_l.stats.as_dict(),
+        "online_store": on_l.store.stats(),
+        "online_curriculum": on_l.curriculum.stats(),
+        "gates_ok": ok,
+    }, name="BENCH_online.json")
+    print(f"wrote {p}")
+    tmp_root.cleanup()
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if main() else 1)

@@ -1,1 +1,6 @@
+from repro.checkpoint.agent_io import (agent_state, copy_tree,
+                                       install_agent_state, params_finite)
 from repro.checkpoint.checkpointer import Checkpointer
+
+__all__ = ["Checkpointer", "agent_state", "copy_tree",
+           "install_agent_state", "params_finite"]

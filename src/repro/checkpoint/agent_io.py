@@ -1,0 +1,51 @@
+"""One serialization path for agent parameters.
+
+`agent_state` flattens an AQORA-style agent (actor/critic pytrees plus
+both AdamW states) into a single pytree that `Checkpointer` can commit
+atomically; `install_agent_state` puts such a tree back onto a live agent.
+Both the offline trainer (`examples/train_aqora.py --resume`) and the
+online `learn.PolicyStore` (versioned hot-swap / rollback) go through
+these two functions, so a checkpoint written by either side restores on
+the other.
+
+`install_agent_state` deep-copies by default: the online learner's PPO
+update donates its param/optimizer buffers to XLA, so the serving agent
+must never alias arrays the learner may later donate — a shared buffer
+would be invalidated under the serving agent mid-stream.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def agent_state(agent) -> Dict:
+    """The agent's full learnable state as one pytree (no copies)."""
+    return {"actor": agent.actor, "critic": agent.critic,
+            "aopt": agent.aopt, "copt": agent.copt}
+
+
+def copy_tree(tree):
+    """Deep-copy every leaf (host round-trip: safe against donation)."""
+    return jax.tree_util.tree_map(lambda x: jnp.asarray(np.array(x)), tree)
+
+
+def install_agent_state(agent, tree: Dict, copy: bool = True) -> None:
+    """Put `tree` (from `agent_state` or a Checkpointer restore) onto
+    `agent`. With copy=True (default) leaves are deep-copied so the source
+    and target never alias device buffers."""
+    if copy:
+        tree = copy_tree(tree)
+    agent.actor, agent.critic = tree["actor"], tree["critic"]
+    agent.aopt, agent.copt = tree["aopt"], tree["copt"]
+
+
+def params_finite(agent) -> bool:
+    """Cheap sanity gate: every actor/critic leaf is finite."""
+    for leaf in jax.tree_util.tree_leaves((agent.actor, agent.critic)):
+        if not bool(np.isfinite(np.asarray(leaf)).all()):
+            return False
+    return True

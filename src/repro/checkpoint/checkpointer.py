@@ -62,10 +62,13 @@ class Checkpointer:
 
     # ------------------------------------------------------------- save
     def save(self, step: int, tree, extra: Optional[Dict[str, Any]] = None,
-             blocking: bool = True):
+             blocking: bool = True) -> bool:
+        """Returns True if the checkpoint was written (or enqueued),
+        False if `step` already exists on disk and the save was skipped —
+        callers reusing a directory must check or pick a fresh step."""
         self.wait()                                # never two writers racing
         if step in self.steps():
-            return                                 # already committed
+            return False                           # already committed
         leaves = _flatten(tree)                    # snapshot NOW (host copy)
         extra = dict(extra or {})
 
@@ -94,11 +97,19 @@ class Checkpointer:
             t = threading.Thread(target=write, daemon=True)
             t.start()
             self._pending = _Pending(t, step)
+        return True
 
     def wait(self):
         if self._pending is not None:
             self._pending.thread.join()
             self._pending = None
+
+    def next_step(self, hint: int = 0) -> int:
+        """Smallest step >= `hint` that is strictly newer than every step
+        on disk or in flight — safe to save() (no silent skip-existing)
+        and guaranteed to become the newest, so restore() picks it up."""
+        pending = [self._pending.step + 1] if self._pending else []
+        return max([hint] + pending + [s + 1 for s in self.steps()])
 
     # ------------------------------------------------------------- restore
     def steps(self) -> List[int]:

@@ -14,7 +14,9 @@ the paper reports it.
 Curriculum (§V-B3): stage 1 exposes only cbo(0/1)+no-op; stage 2 lifts the
 mask on runtime plan adjustments (lead/swap once true cardinalities exist,
 i.e. after the first stage completes); stage 3 removes every restriction
-except invalid-action masking.
+except invalid-action masking. Offline training walks the stages at fixed
+episode fractions (`curriculum_stage`); the serving-time loop promotes on
+live rolling stats instead (`learn.curriculum.AdaptiveCurriculum`).
 """
 from __future__ import annotations
 
@@ -143,6 +145,5 @@ def apply_action(space: ActionSpace, state: RuntimeState, idx: int):
         raise ValueError(act)
     if plan is None:
         return None, 0.0, extra_plan
-    tmp = dataclasses.replace(state) if False else state
     after = planned_shuffles(plan, state)
     return plan, -(after - before) / 10.0, extra_plan

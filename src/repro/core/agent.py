@@ -355,3 +355,13 @@ class AqoraAgent:
     def param_count(self) -> int:
         return sum(int(np.prod(x.shape)) for x in
                    jax.tree_util.tree_leaves((self.actor, self.critic)))
+
+    def clone(self, seed: int = 0) -> "AqoraAgent":
+        """A fresh agent (own jit caches, own PRNG chain) carrying a deep
+        COPY of this agent's params + optimizer state. The online
+        `learn.BackgroundLearner` trains a clone so its donated update
+        buffers can never alias the serving agent's params."""
+        from repro.checkpoint import agent_state, install_agent_state
+        other = type(self)(self.meta, self.cfg, seed=seed)
+        install_agent_state(other, agent_state(self), copy=True)
+        return other

@@ -15,6 +15,7 @@ exploration); returns per-query RunResults for the benchmark tables.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -29,6 +30,12 @@ from repro.sql.catalog import Database
 from repro.sql.cbo import Estimator
 from repro.sql.cluster import ClusterModel
 from repro.sql.workloads import Workload
+
+# training progress goes through logging, NOT stdout: the background
+# learner runs this machinery during serving, and a print would land in
+# the middle of the service's output stream. Callers that want the old
+# behavior opt in via logging.basicConfig(level=logging.INFO).
+log = logging.getLogger("repro.train")
 
 
 @dataclasses.dataclass
@@ -46,13 +53,14 @@ class EpisodeLog:
 
 def train_agent(db: Database, workload: Workload, *,
                 episodes: int = 300, seed: int = 0,
-                cfg: AgentConfig = AgentConfig(),
+                cfg: Optional[AgentConfig] = None,
                 cluster: Optional[ClusterModel] = None,
                 est: Optional[Estimator] = None,
                 use_curriculum: bool = True,
                 agent=None,
                 batch_size: int = 1,
                 log_every: int = 0) -> Tuple[AqoraAgent, List[EpisodeLog]]:
+    cfg = cfg if cfg is not None else AgentConfig()
     cluster = cluster if cluster is not None else ClusterModel()
     meta = WorkloadMeta.from_workload(workload)
     if agent is None:
@@ -69,9 +77,9 @@ def train_agent(db: Database, workload: Workload, *,
             recent = logs[-log_every:]
             lat = np.mean([l.latency for l in recent])
             fails = sum(l.failed for l in recent)
-            print(f"  ep {ep_start+n_eps:4d} stage={stage} "
-                  f"mean_lat={lat:7.2f}s "
-                  f"fails={fails} aloss={m['actor_loss']:+.3f}")
+            log.info("  ep %4d stage=%d mean_lat=%7.2fs fails=%d "
+                     "aloss=%+.3f", ep_start + n_eps, stage, lat, fails,
+                     m["actor_loss"])
 
     ep = 0
     while ep < episodes:

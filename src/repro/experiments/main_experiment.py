@@ -120,6 +120,10 @@ def run_bench(bench: str, seed: int = 0, episodes=None, out_name=None,
 
 
 def main():
+    # train_loop progress goes through logging ("repro.train"); opt in so
+    # hour-long runs keep printing per-episode progress
+    import logging
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default=None)
     ap.add_argument("--all", action="store_true")

@@ -1,0 +1,51 @@
+"""Serve-time trajectory harvesting.
+
+`TrajectoryHarvester` is the opt-in bridge between the scheduler's
+completion stream and the replay buffer: attached to a `LaneScheduler`
+(directly or via `QueryService(hooks=[...])`), it turns every Completion
+into a tagged `replay.Experience` — recording the per-stage
+observations/actions/rewards the serving path already computed, plus the
+live per-table data versions at finish time. Harvesting is pure
+bookkeeping on data the scheduler produced anyway, so it adds no policy
+calls and no virtual-clock cost.
+
+Trajectories with zero decision points (queries that ran to completion
+before the first stage boundary) carry no gradient and are counted but
+not buffered.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.learn.replay import Experience, ReplayBuffer
+
+
+class TrajectoryHarvester:
+    def __init__(self, replay: Optional[ReplayBuffer] = None):
+        self.replay = replay if replay is not None else ReplayBuffer()
+        self.n_seen = 0
+        self.n_harvested = 0
+        self.n_empty = 0
+        self._sched = None
+
+    def attach(self, scheduler) -> None:
+        self._sched = scheduler
+        scheduler.on_complete.append(self._on_complete)
+
+    # ------------------------------------------------------------ harvest
+    def _on_complete(self, comp) -> None:
+        self.n_seen += 1
+        if not comp.traj.actions:
+            self.n_empty += 1
+            return
+        tables = tuple(sorted({r.table for r in comp.query.relations}))
+        versions = {t: self._sched.db.table_version(t) for t in tables}
+        self.replay.add(Experience(
+            seq=comp.seq, query_name=comp.query.name, traj=comp.traj,
+            latency=comp.result.latency, failed=comp.result.failed,
+            finish_t=comp.finish_t, tables=tables, versions=versions))
+        self.n_harvested += 1
+
+    def stats(self) -> Dict[str, float]:
+        return {"seen": self.n_seen, "harvested": self.n_harvested,
+                "empty": self.n_empty, **self.replay.stats()}

@@ -39,7 +39,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -137,6 +137,14 @@ class LaneScheduler:
         self.ticks = 0
         self.decide_sizes: List[int] = []
         self._write_ts = 0.0          # virtual time of the last delta apply
+        # opt-in completion hooks (the lifelong-learning loop's harvest
+        # point): each callback sees every Completion in deterministic
+        # completion-processing order (lane order within a tick — NOT
+        # necessarily sorted by virtual finish time), between policy
+        # batches — never mid-`act_batch` — so a callback may mutate
+        # `self.agent`'s params or `self.stage` and the change
+        # deterministically takes effect from the next tick on.
+        self.on_complete: List[Callable[[Completion], None]] = []
 
     # ------------------------------------------------------------- driving
     def run(self, stream: Sequence[Arrival]) -> List[Completion]:
@@ -289,9 +297,12 @@ class LaneScheduler:
         # decision cost is a host metric (traj.hook_seconds / C_plan), kept
         # off the clock so completion times are bit-reproducible
         finish_t = lane.admit_t + res.latency
-        self.completions.append(Completion(
+        comp = Completion(
             seq=arr.seq, query=arr.query, seed=arr.seed, arrival_t=arr.t,
             admit_t=lane.admit_t, finish_t=finish_t, lane=lane.idx,
-            tick=self.ticks, traj=traj, result=res))
+            tick=self.ticks, traj=traj, result=res)
+        self.completions.append(comp)
         lane.free_at = finish_t
         lane.run = lane.state = lane.arrival = None
+        for cb in self.on_complete:
+            cb(comp)

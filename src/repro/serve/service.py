@@ -52,13 +52,22 @@ class QueryService:
                  cluster: Optional[ClusterModel] = None, n_lanes: int = 8,
                  policy: str = "async", window: Optional[float] = None,
                  cache_bytes: int = 256 * 1024 * 1024,
-                 reuse_stages: bool = True):
+                 reuse_stages: bool = True, explore: bool = False,
+                 hooks: Sequence = ()):
+        """`hooks` are objects with an `attach(scheduler)` method (e.g. the
+        lifelong-learning loop's `learn.TrajectoryHarvester` /
+        `learn.BackgroundLearner`); each is attached to every scheduler
+        this service creates, in order. `explore=True` samples the policy
+        instead of taking argmax — the online loop uses it to keep
+        gathering off-greedy experience while serving."""
         self.db = db
         self.agent = agent
         self.est = est if est is not None else Estimator(db, db.stats)
         self.cluster = cluster if cluster is not None else ClusterModel()
         self.n_lanes, self.policy, self.window = n_lanes, policy, window
         self.reuse_stages = reuse_stages
+        self.explore = explore
+        self.hooks = list(hooks)
         if reuse_stages:
             self.cache = StageCache(max_bytes=cache_bytes)
             db._stage_cache = self.cache     # shared by every AdaptiveRun
@@ -71,8 +80,10 @@ class QueryService:
         """Serve `stream` to completion; returns (completions, stats)."""
         self.scheduler = LaneScheduler(
             self.db, self.est, self.agent, n_lanes=self.n_lanes,
-            explore=False, cluster=self.cluster, policy=self.policy,
+            explore=self.explore, cluster=self.cluster, policy=self.policy,
             window=self.window, reuse_stages=self.reuse_stages)
+        for h in self.hooks:
+            h.attach(self.scheduler)
         comps = self.scheduler.run(list(stream))
         return comps, self._stats(comps)
 
@@ -86,10 +97,13 @@ class QueryService:
 
     def _stats(self, comps: List[Completion]) -> ServiceStats:
         sched = self.scheduler
+        # NB: `if self.cache` would be False for an EMPTY cache (StageCache
+        # defines __len__) — the None-check matters on the empty-stream path
         if not comps:
             return ServiceStats(0, 0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0,
-                                self.cache.stats.as_dict() if self.cache
-                                else None, sched.ticks, 0.0, 0.0)
+                                self.cache.stats.as_dict()
+                                if self.cache is not None else None,
+                                sched.ticks, 0.0, 0.0)
         lat = np.asarray([c.latency for c in comps])
         first = min(c.arrival_t for c in comps)
         makespan = max(c.finish_t for c in comps) - first
@@ -102,7 +116,8 @@ class QueryService:
             latency_p50=float(np.percentile(lat, 50)),
             latency_p99=float(np.percentile(lat, 99)),
             service_mean=float(np.mean([c.service_t for c in comps])),
-            cache=self.cache.stats.as_dict() if self.cache else None,
+            cache=self.cache.stats.as_dict()
+            if self.cache is not None else None,
             ticks=sched.ticks,
             mean_decide_batch=float(np.mean(sched.decide_sizes))
             if sched.decide_sizes else 0.0,

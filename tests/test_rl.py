@@ -139,6 +139,29 @@ def test_curriculum_schedule():
     assert curriculum_stage(90, 100) == 3
 
 
+def test_curriculum_stage_exact_boundaries():
+    """Stage transitions at the exact episode fractions: f < f1 is stage
+    1, f1 <= f < f2 is stage 2, f >= f2 is stage 3 (half-open)."""
+    assert curriculum_stage(24, 100) == 1
+    assert curriculum_stage(25, 100) == 2          # f == 0.25 promotes
+    assert curriculum_stage(54, 100) == 2
+    assert curriculum_stage(55, 100) == 3          # f == 0.55 promotes
+    assert curriculum_stage(99, 100) == 3
+    # custom fractions + the episode==total edge
+    assert curriculum_stage(1, 10, fractions=(0.1, 0.2)) == 2
+    assert curriculum_stage(2, 10, fractions=(0.1, 0.2)) == 3
+    assert curriculum_stage(10, 10) == 3
+    assert curriculum_stage(0, 0) == 1             # total=0 guard
+
+
+def test_train_agent_without_curriculum_is_stage_3(job_db, job_workload,
+                                                   estimator):
+    from repro.core.train_loop import train_agent
+    _, logs = train_agent(job_db, job_workload, episodes=2, seed=0,
+                          est=estimator, use_curriculum=False)
+    assert logs and all(l.stage == 3 for l in logs)
+
+
 def test_dqn_agent_learns_machinery(job_db, job_workload, estimator):
     meta = WorkloadMeta.from_workload(job_workload)
     dqn = DQNAgent(meta, AgentConfig(), seed=0)

@@ -261,6 +261,22 @@ def test_delta_write_barrier_orders_queries(job_workload, agent):
 
 
 # ---------------------------------------------------------------- service
+def test_query_service_empty_stream(job_workload, agent):
+    """An empty arrival stream must yield zeroed stats, not a divide by
+    zero (qps, percentiles, mean decide batch)."""
+    db = fresh_db(scale=0.05)
+    svc = QueryService(db, agent, est=Estimator(db, db.stats), n_lanes=2)
+    comps, stats = svc.run([])
+    assert comps == []
+    assert stats.n_completed == 0 and stats.n_failed == 0
+    assert stats.qps == 0.0 and stats.latency_p99 == 0.0
+    assert stats.mean_decide_batch == 0.0 and stats.ticks == 0
+    assert 0.0 <= stats.cache["hit_rate"] <= 1.0
+    # and run_queries of an empty batch goes through the same path
+    comps, stats = svc.run_queries([])
+    assert comps == [] and stats.n_completed == 0
+
+
 def test_query_service_stats_and_driver(job_workload, agent):
     db = fresh_db(scale=0.08)
     est = Estimator(db, db.stats)
