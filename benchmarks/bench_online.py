@@ -37,13 +37,12 @@ nothing is netted out silently.
 
   PYTHONPATH=src python -m benchmarks.bench_online [--smoke]
 """
-import argparse
 import tempfile
 import time
 
 import numpy as np
 
-from benchmarks.common import csv_line, update_bench_json
+from benchmarks.common import bench_args, csv_line, emit_bench_json
 
 
 # ------------------------------------------------------------ workload
@@ -128,11 +127,7 @@ def _serve(db, est, agent, stream, *, n_lanes, explore, hooks):
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny scale for CI (seconds, not minutes)")
-    ap.add_argument("--lanes", type=int, default=6)
-    args = ap.parse_args(argv)
+    args = bench_args(argv, lanes=6)
 
     from repro.checkpoint import agent_state, copy_tree, install_agent_state
     from repro.core.agent import AgentConfig, AqoraAgent
@@ -288,7 +283,7 @@ def main(argv=None):
     csv_line("frozen_post_drift_p99_s", 0, rows["frozen"]["post_drift_p99"])
     csv_line("learning_qps_ratio", 0, f"{qps_ratio:.3f}")
     csv_line("learning_serve_path_host_ratio", 0, f"{serve_ratio:.3f}")
-    p = update_bench_json({
+    emit_bench_json({
         "smoke": args.smoke, "scale": scale, "n_queries": n_queries,
         "n_lanes": args.lanes, "rate_qps": rate, "drift_at": drift_at,
         "growth_x": growth, "update_every": update_every,
@@ -303,7 +298,6 @@ def main(argv=None):
         "online_curriculum": on_l.curriculum.stats(),
         "gates_ok": ok,
     }, name="BENCH_online.json")
-    print(f"wrote {p}")
     tmp_root.cleanup()
     return ok
 

@@ -1,0 +1,372 @@
+"""QoS control-plane benchmark: SLO-aware admission + EDF + degradation
+vs plain async serving on an overloaded multi-tenant mix — feeds
+results/BENCH_qos.json.
+
+Segment A (SLO-miss under overload): two tenants share a small lane pool
+at an overload factor where plain async FCFS misses a large fraction of
+deadlines: "interactive" (tight SLO, high rate, and every STRAG_EVERY-th
+query a 300s straggler — a monster query behind an interactive deadline)
+and "analytics" (loose SLO, background rate). The SAME trace is replayed
+through (1) plain async — the PR-2 path, deadlines observed but ignored;
+(2) EDF scheduling alone; (3) EDF + QoS admission: a latency predictor
+(warm-started from the serving agent's value head, trained on latencies
+harvested from a calibration serving pass via the PR-3 replay buffer)
+rejects predicted-hopeless queries at admission and the degradation
+ladder shrinks the re-optimization hook budget for predicted SLO
+missers. Gates: plain async misses >= 25% of deadlines at this load, QoS
+cuts the SLO-miss rate AND raises goodput (on-time completions / all
+submitted, rejects counted as lost), and the p50 of NON-degraded
+completions stays within noise of plain async per tenant.
+
+Segment B (noisy neighbor): a "victim" tenant with a small repeated
+working set shares the cache with a "flood" tenant streaming distinct
+queries. With per-tenant partitions the victim's partition records ZERO
+evictions and its whole working set stays resident; with one shared
+cache of the same total bytes, the flood provably evicts the victim's
+entries (residency probed by signature).
+
+Segment C (pay-for-what-you-use): the same stream served with the QoS
+machinery constructed but DISABLED (tenant registry + partitioned cache,
+no admission policy, policy="async") is bit-identical to the plain
+PR-2/PR-3 async path — completions, actions and finish times.
+
+All latencies are virtual-clock, so every comparison is deterministic.
+
+  PYTHONPATH=src python -m benchmarks.bench_qos [--smoke]
+"""
+import time
+
+import numpy as np
+
+from benchmarks.bench_serve import STRAG_EVERY, _build, _straggler, \
+    fast_subset
+from benchmarks.common import bench_args, csv_line, emit_bench_json
+
+SLO_INT = 40.0                  # interactive deadline (virtual seconds)
+SLO_ANL = 400.0                 # analytics deadline
+SLO_REP = 200.0                 # reports deadline: between the ladder's
+#   rungs for a ~300s straggler-class query (severity ~1.8), so reports
+#   are admitted DEGRADED (shrunken hook budget) instead of rejected
+
+
+# -------------------------------------------------------------- predictor
+def _fit_predictor(agent, wl, *, scale, smoke):
+    """Calibration pass: serve a mixed trace, harvest trajectories into
+    the PR-3 replay buffer, and fit the admission-time latency predictor
+    (warm-started from the agent's critic) on the realized latencies."""
+    from repro.learn import ReplayBuffer, TrajectoryHarvester
+    from repro.serve.driver import open_loop_stream
+    from repro.serve.qos import LatencyPredictor
+    from repro.serve.service import QueryService
+    from repro.sql import datagen
+    from repro.sql.cbo import Estimator
+
+    db = datagen.make_job_like(scale=scale, seed=0)
+    est = Estimator(db, db.stats)
+    fast = fast_subset(wl)
+    n_cal = 24 if smoke else 60
+    stream = open_loop_stream(fast, rate=4.0, n_queries=n_cal, seed=29)
+    strag = _straggler()
+    for i, a in enumerate(stream):
+        if (i + 1) % 6 == 0:
+            a.query = strag
+    harv = TrajectoryHarvester(ReplayBuffer(capacity=256))
+    QueryService(db, agent, est=est, n_lanes=4, hooks=[harv]).run(stream)
+
+    pred = LatencyPredictor(agent.meta, agent=agent, lr=5e-3)
+    rng = np.random.default_rng(7)
+    for _ in range(8 if smoke else 12):
+        loss = pred.fit_from_replay(harv.replay, rng, n_samples=48,
+                                    batch_size=16, epochs=3)
+    p_strag = pred.predict_query(strag)
+    p_fast = pred.predict_query(fast[0])
+    print(f"predictor: {harv.n_harvested} harvested trajectories, final "
+          f"loss {loss:.3f}; straggler->{p_strag:.0f}s fast->{p_fast:.1f}s")
+    return pred, p_strag, p_fast
+
+
+# ------------------------------------------------------------- segment A
+def _slo_stream(wl, *, n_inter, n_anl, n_rep, seed):
+    """The three-tenant overload trace (rebuilt per pass for clarity; the
+    scheduler copies arrivals per run, so replaying one list is also
+    safe)."""
+    from repro.serve.driver import TenantTraffic, multi_tenant_stream
+    fast = fast_subset(wl)
+    traffics = [
+        TenantTraffic("interactive", fast[:6], rate=3.0, n_queries=n_inter,
+                      slo=SLO_INT, seed=seed),
+        TenantTraffic("analytics", fast[6:12] or fast, rate=1.0,
+                      n_queries=n_anl, slo=SLO_ANL, seed=seed + 1)]
+    if n_rep:
+        traffics.append(TenantTraffic("reports", [_straggler()], rate=0.3,
+                                      n_queries=n_rep, slo=SLO_REP,
+                                      seed=seed + 2))
+    stream = multi_tenant_stream(traffics)
+    strag, k = _straggler(), 0
+    for a in stream:
+        if a.tenant == "interactive":
+            k += 1
+            if k % STRAG_EVERY == 0:
+                a.query = strag
+    return stream
+
+
+def _registry():
+    from repro.serve.qos import TenantRegistry, TenantSpec
+    return TenantRegistry([
+        TenantSpec("interactive", weight=2.0, slo=SLO_INT),
+        TenantSpec("analytics", weight=1.0, slo=SLO_ANL),
+        TenantSpec("reports", weight=1.0, slo=SLO_REP)])
+
+
+def _outcome(comps, rejects, n_queries):
+    on_time = sum(not c.slo_miss for c in comps)
+    missed = sum(c.slo_miss for c in comps)
+    return {"completed": len(comps), "rejected": len(rejects),
+            "slo_missed": missed,
+            "slo_miss_rate": round(missed / max(len(comps), 1), 4),
+            "goodput": round(on_time / n_queries, 4)}
+
+
+def bench_slo(wl, agent, pred, *, scale, n_lanes, smoke):
+    from repro.serve.qos import DegradationLadder, QoSAdmission
+    from repro.serve.service import QueryService
+    from repro.sql import datagen
+    from repro.sql.cbo import Estimator
+
+    # enough stragglers to block EVERY lane (the overload): one straggler
+    # per STRAG_EVERY interactive arrivals, so n_inter/STRAG_EVERY >=
+    # n_lanes leaves plain async with no free lane for the tail
+    n_inter, n_anl, n_rep = (48, 12, 2) if smoke else (96, 24, 3)
+    n_queries = n_inter + n_anl + n_rep
+    print(f"\n== QoS: SLO misses under overload ({n_inter}+{n_anl}+{n_rep} "
+          f"queries, 1 straggler per {STRAG_EVERY} interactive, {n_lanes} "
+          f"lanes, SLOs {SLO_INT:.0f}/{SLO_ANL:.0f}/{SLO_REP:.0f}s) ==")
+    out, comps_by_mode = {}, {}
+    for mode in ("async", "edf", "edf+qos"):
+        db = datagen.make_job_like(scale=scale, seed=0)
+        est = Estimator(db, db.stats)
+        reg = _registry()
+        adm = QoSAdmission(reg, predictor=pred,
+                           ladder=DegradationLadder()) \
+            if mode == "edf+qos" else None
+        svc = QueryService(db, agent, est=est, n_lanes=n_lanes,
+                           policy="async" if mode == "async" else "edf",
+                           tenants=reg, admission=adm)
+        t0 = time.perf_counter()
+        comps, stats = svc.run(_slo_stream(wl, n_inter=n_inter,
+                                           n_anl=n_anl, n_rep=n_rep,
+                                           seed=11))
+        host = time.perf_counter() - t0
+        o = _outcome(comps, svc.scheduler.rejections, n_queries)
+        o["degraded"] = stats.n_degraded
+        o["queue_wait_mean"] = stats.queue_wait_mean
+        o["per_tenant_miss_rate"] = {
+            t: ts.slo_miss_rate for t, ts in stats.per_tenant.items()}
+        o["hook_seconds"] = stats.hook_seconds
+        out[mode] = o
+        comps_by_mode[mode] = comps
+        print(f"{mode:8s} miss_rate={o['slo_miss_rate']:.2f} "
+              f"goodput={o['goodput']:.2f} rejected={o['rejected']:3d} "
+              f"degraded={o['degraded']:3d} "
+              f"queue_wait={o['queue_wait_mean']:7.2f}s host={host:.1f}s")
+
+    # matched-population p50: the queries served at FULL budget under
+    # edf+qos, compared against the very same seqs in each other mode —
+    # the control plane must not tax the queries it didn't touch
+    matched = {c.seq for c in comps_by_mode["edf+qos"] if not c.degraded}
+    for mode, comps in comps_by_mode.items():
+        sel = [c for c in comps if c.seq in matched]
+        out[mode]["p50_non_degraded"] = {
+            t: round(float(np.percentile(
+                [c.latency for c in sel if c.tenant == t], 50)), 3)
+            for t in ("interactive", "analytics")
+            if any(c.tenant == t for c in sel)}
+    return out
+
+
+# ------------------------------------------------------------- segment B
+def _victim_queries():
+    from repro.sql.query import Filter, JoinCond, Query, Relation
+    return [Query(f"victim{i}",
+                  (Relation("t", "title",
+                            (Filter("production_year", "<=", (y,)),)),
+                   Relation("kt", "kind_type", ())),
+                  (JoinCond("t", "kind_id", "kt", "id"),))
+            for i, y in enumerate((1950, 1961, 1972))]
+
+
+def _flood_queries(n):
+    from repro.sql.query import Filter, JoinCond, Query, Relation
+    return [Query(f"flood{i}",
+                  (Relation("t", "title",
+                            (Filter("production_year", "<=", (1900 + i,)),)),
+                   Relation("kt", "kind_type", ())),
+                  (JoinCond("t", "kind_id", "kt", "id"),))
+            for i in range(n)]
+
+
+def bench_isolation(agent, *, scale, n_lanes, smoke):
+    from repro.serve.driver import TenantTraffic, multi_tenant_stream
+    from repro.serve.qos import TenantRegistry, TenantSpec
+    from repro.serve.service import QueryService
+    from repro.sql import datagen
+    from repro.sql.cbo import Estimator
+
+    n_vic, n_flood = (12, 40) if smoke else (24, 120)
+    victims = _victim_queries()
+    floods = _flood_queries(n_flood)
+
+    # solo pass: measure the victim's working set (bytes + signatures)
+    db = datagen.make_job_like(scale=scale, seed=0)
+    svc = QueryService(db, agent, est=Estimator(db, db.stats), n_lanes=2)
+    svc.run_queries(victims * 2, seeds=range(len(victims) * 2))
+    sigs = list(svc.cache._entries.keys())
+    ws = svc.cache.bytes
+    vic_budget = 2 * ws
+    flood_budget = max(ws // 2, 64 * 1024)
+    print(f"\n== QoS: noisy-neighbor cache isolation (victim working set "
+          f"{ws / 1e3:.0f} KB / {len(sigs)} entries; budgets "
+          f"victim={vic_budget / 1e3:.0f} KB flood={flood_budget / 1e3:.0f} "
+          f"KB; {n_flood} distinct flood queries) ==")
+
+    def mixed_stream():
+        # the victim's trace ends well before the flood's: the tail is
+        # pure neighbor noise, exactly when a shared LRU forgets the
+        # victim and a partition doesn't
+        return multi_tenant_stream([
+            TenantTraffic("victim", victims, rate=4.0, n_queries=n_vic,
+                          seed=3),
+            TenantTraffic("flood", floods, rate=4.0, n_queries=n_flood,
+                          seed=4)])
+
+    def resident(cache):
+        return sum(s in cache for s in sigs)
+
+    # partitioned: per-tenant budgets, shared version tags
+    db = datagen.make_job_like(scale=scale, seed=0)
+    reg = TenantRegistry([TenantSpec("victim", cache_bytes=vic_budget),
+                          TenantSpec("flood", cache_bytes=flood_budget)])
+    svc_p = QueryService(db, agent, est=Estimator(db, db.stats),
+                         n_lanes=n_lanes, tenants=reg)
+    _, stats_p = svc_p.run(mixed_stream())
+    parts = svc_p.cache.partitions()
+    vic_part, flood_part = parts["victim"], parts["flood"]
+    res_p = resident(vic_part)
+
+    # shared single cache of the same TOTAL budget
+    db = datagen.make_job_like(scale=scale, seed=0)
+    svc_s = QueryService(db, agent, est=Estimator(db, db.stats),
+                         n_lanes=n_lanes,
+                         cache_bytes=vic_budget + flood_budget)
+    _, stats_s = svc_s.run(mixed_stream())
+    res_s = resident(svc_s.cache)
+
+    out = {
+        "victim_ws_bytes": ws, "victim_ws_entries": len(sigs),
+        "victim_budget": vic_budget, "flood_budget": flood_budget,
+        "partitioned": {
+            "victim": vic_part.stats.as_dict(),
+            "flood": flood_part.stats.as_dict(),
+            "victim_resident": res_p,
+            "cross_tenant_evictions": vic_part.stats.evictions},
+        "shared": {"cache": stats_s.cache, "victim_resident": res_s},
+    }
+    print(f"partitioned: victim evictions={vic_part.stats.evictions} "
+          f"hit_rate={vic_part.stats.hit_rate:.2f} resident="
+          f"{res_p}/{len(sigs)}; flood evictions={flood_part.stats.evictions}")
+    print(f"shared:      victim resident={res_s}/{len(sigs)} "
+          f"(flood evicted {len(sigs) - res_s}) "
+          f"total evictions={stats_s.cache['evictions']}")
+    ok = vic_part.stats.evictions == 0 and res_p == len(sigs) \
+        and res_s < len(sigs) and flood_part.stats.evictions > 0
+    return out, ok
+
+
+# ------------------------------------------------------------- segment C
+def bench_qos_off_identical(wl, agent, *, scale, n_lanes, smoke):
+    from repro.serve.service import QueryService
+    from repro.sql import datagen
+    from repro.sql.cbo import Estimator
+
+    n_inter, n_anl = (16, 6) if smoke else (32, 12)
+    n = n_inter + n_anl
+    print(f"\n== QoS disabled == plain async: bit-identity ({n} queries) ==")
+
+    def serve(**kw):
+        db = datagen.make_job_like(scale=scale, seed=0)
+        svc = QueryService(db, agent, est=Estimator(db, db.stats),
+                           n_lanes=n_lanes, policy="async", **kw)
+        comps, _ = svc.run(_slo_stream(wl, n_inter=n_inter, n_anl=n_anl,
+                                       n_rep=0, seed=23))
+        return comps
+
+    plain = serve()                          # the PR-2/PR-3 path
+    off = serve(tenants=_registry())         # QoS built but disabled
+    identical = (
+        [c.finish_t for c in plain] == [c.finish_t for c in off] and
+        [c.traj.actions for c in plain] == [c.traj.actions for c in off] and
+        [c.lane for c in plain] == [c.lane for c in off])
+    print(f"qos-off completions identical to plain async: {identical}")
+    return identical
+
+
+# ------------------------------------------------------------------ main
+def main(argv=None):
+    args = bench_args(argv, lanes=4)
+    scale = 0.04 if args.smoke else 0.1
+
+    db, wl, est, agent = _build(scale)
+    # warm the jit caches (policy batch + predictor shapes)
+    from repro.serve.service import QueryService
+    QueryService(db, agent, est=est, n_lanes=args.lanes).run_queries(
+        wl.train[:args.lanes])
+
+    pred, p_strag, p_fast = _fit_predictor(agent, wl, scale=scale,
+                                           smoke=args.smoke)
+    slo = bench_slo(wl, agent, pred, scale=scale, n_lanes=args.lanes,
+                    smoke=args.smoke)
+    iso, iso_ok = bench_isolation(agent, scale=scale, n_lanes=args.lanes,
+                                  smoke=args.smoke)
+    identical = bench_qos_off_identical(wl, agent, scale=scale,
+                                        n_lanes=args.lanes, smoke=args.smoke)
+
+    a, q = slo["async"], slo["edf+qos"]
+    overloaded = a["slo_miss_rate"] >= 0.25
+    qos_wins = (q["slo_miss_rate"] < a["slo_miss_rate"]
+                and q["goodput"] > a["goodput"])
+    # non-degraded completions must not pay for the control plane: per
+    # tenant, their p50 stays within 5% (or absolutely better) of async
+    p50_ok = all(
+        q["p50_non_degraded"].get(t, 0.0) <=
+        1.05 * a["p50_non_degraded"].get(t, np.inf)
+        for t in q["p50_non_degraded"])
+    ok = bool(overloaded and qos_wins and p50_ok and iso_ok and identical)
+
+    print(f"\nasync miss_rate={a['slo_miss_rate']:.2f} -> edf+qos "
+          f"{q['slo_miss_rate']:.2f}; goodput {a['goodput']:.2f} -> "
+          f"{q['goodput']:.2f}; overloaded={overloaded} p50_ok={p50_ok} "
+          f"isolation_ok={iso_ok} qos_off_identical={identical}")
+    csv_line("qos_async_miss_rate", 0, f"{a['slo_miss_rate']:.3f}")
+    csv_line("qos_edfqos_miss_rate", 0, f"{q['slo_miss_rate']:.3f}")
+    csv_line("qos_goodput_gain", 0,
+             f"{q['goodput'] - a['goodput']:.3f}")
+    csv_line("qos_victim_cross_evictions", 0,
+             iso["partitioned"]["cross_tenant_evictions"])
+    emit_bench_json({
+        "smoke": args.smoke, "scale": scale, "n_lanes": args.lanes,
+        "slo_interactive_s": SLO_INT, "slo_analytics_s": SLO_ANL,
+        "straggler_every": STRAG_EVERY,
+        "predictor": {"straggler_pred_s": round(p_strag, 1),
+                      "fast_pred_s": round(p_fast, 2)},
+        "slo": slo, "isolation": iso,
+        "qos_off_identical_to_async": identical,
+        "gates": {"overloaded": overloaded, "qos_wins": qos_wins,
+                  "p50_non_degraded_ok": p50_ok, "isolation_ok": iso_ok,
+                  "ok": ok},
+    }, name="BENCH_qos.json")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if main() else 1)

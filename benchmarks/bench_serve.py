@@ -17,10 +17,9 @@ against a cache-off run.
 
   PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
 """
-import argparse
 import time
 
-from benchmarks.common import csv_line, update_bench_json
+from benchmarks.common import bench_args, csv_line, emit_bench_json
 
 STRAG_EVERY = 8
 
@@ -40,6 +39,12 @@ def _build(scale: float, seed: int = 0):
     return db, wl, est, agent
 
 
+def fast_subset(wl):
+    """Dimension-join-ish templates: the sub-second traffic every serving
+    bench mixes around its stragglers."""
+    return [q for q in wl.train if q.n_relations <= 6] or wl.train
+
+
 def _straggler():
     from repro.sql.query import JoinCond, Query, Relation
     return Query("straggler",
@@ -54,9 +59,8 @@ def _mix_stream(wl, n_queries: int, rate: float, seed: int):
     """Small-template queries with a deterministic straggler every
     STRAG_EVERY arrivals."""
     from repro.serve.driver import open_loop_stream
-    fast = [q for q in wl.train if q.n_relations <= 6] or wl.train
-    stream = open_loop_stream(fast, rate=rate, n_queries=n_queries,
-                              seed=seed)
+    stream = open_loop_stream(fast_subset(wl), rate=rate,
+                              n_queries=n_queries, seed=seed)
     strag = _straggler()
     for i, a in enumerate(stream):
         if (i + 1) % STRAG_EVERY == 0:
@@ -82,6 +86,8 @@ def bench_straggler_mix(db, wl, est, agent, *, n_queries: int, rate: float,
         out[policy] = stats
         print(f"{policy:9s} qps={stats.qps:7.2f}  p50={stats.latency_p50:8.2f}s "
               f"p99={stats.latency_p99:8.2f}s  makespan={stats.makespan:8.1f}s "
+              f"queue_wait={stats.queue_wait_mean:7.2f}s "
+              f"in-lane={stats.service_mean:6.2f}s "
               f"hit_rate={stats.cache['hit_rate']:.2f}  "
               f"mean_batch={stats.mean_decide_batch:.1f}  host={host:.1f}s")
     a, l = out["async"], out["lockstep"]
@@ -102,7 +108,7 @@ def bench_dynamic(db, wl, est, agent, *, n_queries: int, rate: float,
 
     print(f"\n== serving: delta-table dynamic workload "
           f"(delta every {delta_every} queries, +{delta_rows} rows) ==")
-    fast = [q for q in wl.train if q.n_relations <= 6] or wl.train
+    fast = fast_subset(wl)
     stream = open_loop_stream(fast, rate=rate, n_queries=n_queries, seed=13,
                               delta_every=delta_every,
                               delta_tables=("movie_info", "movie_keyword",
@@ -129,11 +135,7 @@ def bench_dynamic(db, wl, est, agent, *, n_queries: int, rate: float,
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny scale for CI (seconds, not minutes)")
-    ap.add_argument("--lanes", type=int, default=8)
-    args = ap.parse_args(argv)
+    args = bench_args(argv, lanes=8)
     scale = 0.04 if args.smoke else 0.1
     n_queries = 24 if args.smoke else 96
     rate = 4.0
@@ -152,7 +154,7 @@ def main(argv=None):
                             delta_every=6 if args.smoke else 10,
                             delta_rows=2000)
     a, l = mix["async"], mix["lockstep"]
-    p = update_bench_json({
+    emit_bench_json({
         "smoke": args.smoke, "n_lanes": args.lanes, "n_queries": n_queries,
         "straggler_every": STRAG_EVERY, "rate_qps": rate,
         "async": a.as_dict(), "lockstep": l.as_dict(),
@@ -162,7 +164,6 @@ def main(argv=None):
         "dynamic": dyn.as_dict(),
         "dynamic_invalidation_consistent": ok,
     }, name="BENCH_serve.json")
-    print(f"wrote {p}")
     return a.qps > l.qps and ok
 
 

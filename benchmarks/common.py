@@ -1,6 +1,10 @@
-"""Shared helpers for the benchmark suite: result loading + formatting."""
+"""Shared helpers for the benchmark suite: result loading + formatting,
+plus the serving benchmarks' common CLI (--smoke/--lanes) and JSON-result
+emission (bench_serve / bench_online / bench_qos all go through
+`bench_args` + `emit_bench_json`)."""
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 
@@ -45,4 +49,23 @@ def update_bench_json(entries: dict, name: str = "BENCH_rollout.json"):
     data = json.loads(p.read_text()) if p.exists() else {}
     data.update(entries)
     p.write_text(json.dumps(data, indent=2, sort_keys=True))
+    return p
+
+
+def bench_args(argv=None, *, lanes: int = 8, extra=None):
+    """The serving benchmarks' shared CLI: `--smoke` (tiny scale for CI)
+    and `--lanes`. `extra(parser)` may add benchmark-specific flags."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scale for CI (seconds, not minutes)")
+    ap.add_argument("--lanes", type=int, default=lanes)
+    if extra is not None:
+        extra(ap)
+    return ap.parse_args(argv)
+
+
+def emit_bench_json(entries: dict, name: str):
+    """Persist one serving benchmark's result blob and announce the path."""
+    p = update_bench_json(entries, name=name)
+    print(f"wrote {p}")
     return p

@@ -15,10 +15,11 @@ def main() -> None:
     from benchmarks import (bench_ablation_actions, bench_ablation_net,
                             bench_ablation_rl, bench_ablation_strategy,
                             bench_cbo_cost, bench_delta_table, bench_dynamic,
-                            bench_kernels, bench_online, bench_query_perf,
-                            bench_roofline, bench_serve, bench_tails)
+                            bench_kernels, bench_online, bench_qos,
+                            bench_query_perf, bench_roofline, bench_serve,
+                            bench_tails)
     ran, missing = [], []
-    for mod in (bench_query_perf, bench_serve, bench_online,
+    for mod in (bench_query_perf, bench_serve, bench_online, bench_qos,
                 bench_delta_table, bench_tails, bench_dynamic,
                 bench_ablation_rl, bench_ablation_net,
                 bench_ablation_strategy, bench_ablation_actions,

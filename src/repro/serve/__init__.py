@@ -37,9 +37,18 @@ Four cooperating pieces, each in its own module:
 
   service.py    Façade tying it together: `QueryService.run(stream)`
                 installs the cache, runs the scheduler, and reports
-                throughput (qps), p50/p99 latency, and cache hit rate —
-                the numbers `benchmarks/bench_serve.py` persists to
-                results/BENCH_serve.json.
+                throughput (qps), p50/p99 latency (with the queue-wait /
+                in-lane breakdown), and cache hit rate — the numbers
+                `benchmarks/bench_serve.py` persists to
+                results/BENCH_serve.json. With a tenant registry the
+                stats gain a per-tenant breakdown (SLO-miss rate,
+                rejected/degraded counts, partition cache counters).
+
+  qos/          SLO-aware multi-tenant control plane: tenant registry
+                (token buckets, fair share, cache budgets), admission-
+                time latency predictor, degradation ladder, and the
+                pluggable `AdmissionPolicy` the scheduler consults —
+                see qos/__init__.py and README.md.
 
 Imports are lazy so that `sql.executor` can depend on `serve.cache`
 without creating an import cycle through this package.
@@ -49,14 +58,25 @@ from __future__ import annotations
 _EXPORTS = {
     "StageCache": "repro.serve.cache",
     "CacheStats": "repro.serve.cache",
+    "PartitionedStageCache": "repro.serve.cache",
     "Arrival": "repro.serve.scheduler",
     "Completion": "repro.serve.scheduler",
+    "Rejection": "repro.serve.scheduler",
     "LaneScheduler": "repro.serve.scheduler",
     "DeltaBatch": "repro.serve.deltas",
     "apply_delta": "repro.serve.deltas",
     "open_loop_stream": "repro.serve.driver",
+    "multi_tenant_stream": "repro.serve.driver",
+    "TenantTraffic": "repro.serve.driver",
     "QueryService": "repro.serve.service",
     "ServiceStats": "repro.serve.service",
+    "TenantStats": "repro.serve.service",
+    "AdmissionPolicy": "repro.serve.qos",
+    "QoSAdmission": "repro.serve.qos",
+    "DegradationLadder": "repro.serve.qos",
+    "LatencyPredictor": "repro.serve.qos",
+    "TenantRegistry": "repro.serve.qos",
+    "TenantSpec": "repro.serve.qos",
 }
 
 __all__ = sorted(_EXPORTS)

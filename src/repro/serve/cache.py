@@ -96,3 +96,81 @@ class StageCache:
     def clear(self) -> None:
         self._entries.clear()
         self.bytes = 0
+
+
+class PartitionedStageCache(StageCache):
+    """Per-tenant cache partitions under one roof.
+
+    Each tenant evicts ONLY against its own byte budget, so a
+    noisy-neighbor tenant flooding the cache can never push out a
+    well-behaved tenant's entries — the isolation property
+    `benchmarks/bench_qos.py` pins down. Invalidation stays O(1) and
+    GLOBAL: signatures embed per-table version tags, so one delta fences
+    every tenant's stale entries at once without scanning any partition
+    (`note_invalidation` only bumps the shared counter).
+
+    The object itself IS the default partition (a plain `StageCache`
+    with `default_bytes`), so code that treats `db._stage_cache` as a
+    flat cache — `sql.executor.Executor`'s auto-attach, direct
+    `run_adaptive` calls — keeps working unchanged and lands in the
+    default tenant's budget. The scheduler routes each lane to
+    `partition(arrival.tenant)` explicitly. Only tenants with a
+    CONFIGURED budget get their own partition; unknown tenant ids share
+    the default one, so total cache memory stays bounded by
+    sum(budgets) + default_bytes no matter how many distinct ids a
+    stream carries.
+    """
+
+    def __init__(self, default_bytes: int = 256 * 1024 * 1024,
+                 max_entry_bytes: int = 32 * 1024 * 1024,
+                 budgets: Optional[Dict[str, int]] = None):
+        budgets = dict(budgets or {})
+        # the object IS the "default" partition, so an explicit budget for
+        # the default tenant must size THIS cache, not a side partition
+        super().__init__(budgets.get("default", default_bytes),
+                         max_entry_bytes)
+        self.default_bytes = default_bytes
+        self._budgets = budgets
+        self._parts: Dict[str, StageCache] = {}
+
+    def partition(self, tenant: Optional[str]) -> StageCache:
+        """The `StageCache` serving `tenant`: its own partition (created
+        lazily under its configured budget) for budgeted tenants, the
+        default partition for everyone else."""
+        if tenant is None or tenant == "default":
+            return self
+        p = self._parts.get(tenant)
+        if p is None:
+            budget = self._budgets.get(tenant)
+            if budget is None:         # unbudgeted ids share the default
+                return self
+            p = self._parts[tenant] = StageCache(budget,
+                                                 self.max_entry_bytes)
+        return p
+
+    def partitions(self) -> Dict[str, StageCache]:
+        out = {"default": self}
+        out.update(self._parts)
+        return out
+
+    # note_invalidation: the base method already only bumps the shared
+    # counter — O(1) across ALL partitions, the version tags inside every
+    # signature do the fencing
+
+    def clear(self) -> None:
+        super().clear()
+        for p in self._parts.values():
+            p.clear()
+
+    def stats_by_tenant(self) -> Dict[str, Dict[str, float]]:
+        return {t: p.stats.as_dict() for t, p in self.partitions().items()}
+
+    def aggregate_stats(self) -> Dict[str, float]:
+        """Counters summed over every partition (invalidations are shared,
+        counted once), shaped like `CacheStats.as_dict()`."""
+        agg = CacheStats(invalidations=self.stats.invalidations)
+        for p in self.partitions().values():
+            agg.hits += p.stats.hits
+            agg.misses += p.stats.misses
+            agg.evictions += p.stats.evictions
+        return agg.as_dict()

@@ -1,0 +1,43 @@
+"""QoS control plane: SLO-aware multi-tenant serving on top of the lane
+scheduler.
+
+The serving tier (PR 2) decides *which plan* each query runs; the
+lifelong loop (PR 3) decides *what the policy knows*; this package
+decides *whether and how hard* each query gets re-optimized under
+latency SLOs and tenant contention. Four cooperating pieces:
+
+  tenancy.py    `TenantRegistry`: per-tenant token-bucket rate limits on
+                the virtual clock, weighted fair-share lane accounting,
+                default SLOs, cache partition budgets.
+
+  predictor.py  `LatencyPredictor`: a critic-shaped jitted net over the
+                encoded syntactic plan (warm-startable from the serving
+                agent's value head, trained from harvested latencies via
+                the PR-3 replay buffer) predicting query latency at
+                admission time.
+
+  degrade.py    `DegradationLadder`: predicted-miss severity -> shrunken
+                re-optimization hook budget (down to the pure
+                syntactic/AQE plan) or rejection.
+
+  admission.py  `AdmissionPolicy` (FCFS pass-through base) and
+                `QoSAdmission`: token-bucket deferral, EDF + fair-share
+                selection, predictor-vs-deadline rejection, ladder
+                degradation — plugged into `LaneScheduler(admission=…)`.
+
+Everything runs on the deterministic virtual clock with seeded RNGs, so
+QoS decisions are bit-reproducible; with no admission policy installed
+the scheduler is bit-identical to the PR-2/PR-3 async path.
+"""
+from repro.serve.qos.admission import (AdmissionDecision, AdmissionPolicy,
+                                       EdfPolicy, QoSAdmission)
+from repro.serve.qos.degrade import DegradationLadder, DegradeDecision
+from repro.serve.qos.predictor import LatencyPredictor, encode_query
+from repro.serve.qos.tenancy import TenantRegistry, TenantSpec
+
+__all__ = [
+    "AdmissionDecision", "AdmissionPolicy", "EdfPolicy", "QoSAdmission",
+    "DegradationLadder", "DegradeDecision",
+    "LatencyPredictor", "encode_query",
+    "TenantRegistry", "TenantSpec",
+]

@@ -1,0 +1,178 @@
+"""Admission-time latency predictor: a small jitted value net over the
+encoded syntactic plan.
+
+Neo showed a learned value network predicts plan latency well enough to
+steer search; here the same idea steers ADMISSION: before a query touches
+a lane, its syntactic plan is encoded exactly like a pre-execution hook
+state (all cardinalities unobserved) and a critic-shaped encoder+head
+predicts its latency, which the admission policy compares against the
+query's deadline.
+
+Two ties to the rest of the system keep this honest:
+
+  * Warm start. The net is critic-shaped on purpose: the serving agent's
+    critic already approximates v(s0) ~= -sqrt(T_execute) (Alg. 1's
+    return), so `LatencyPredictor(meta, agent=agent)` copies the critic's
+    params and is calibrated from the first request — the head's output
+    is read as -sqrt(latency), and training keeps that convention.
+  * Training data is harvested serving traffic: `fit_from_replay` draws
+    prioritized samples from the PR-3 `learn.ReplayBuffer` (each
+    `Experience.traj.states[0]` IS the encoded pre-exec state, and
+    failed runs carry the timeout as their latency), so the predictor
+    tracks drift for free alongside the background learner.
+
+Everything is deterministic: fixed-shape jitted batches, a caller-seeded
+rng for sampling, and per-query prediction memoized by (fit generation,
+query name) — the syntactic encoding of a query never changes.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import nets
+from repro.core.encoding import MAX_NODES, WorkloadMeta, encode_state
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.sql.executor import RuntimeState
+from repro.sql.plans import syntactic_plan
+
+
+def encode_query(query, meta: WorkloadMeta):
+    """Encode `query`'s syntactic plan exactly like the pre-execution hook
+    state (no materialized stages, every cardinality unobserved)."""
+    state = RuntimeState(query, syntactic_plan(query), {}, None, 0, 0.0, 0,
+                         None)
+    return encode_state(state, meta)
+
+
+class LatencyPredictor:
+    """Critic-shaped latency regressor: head output o(s) is trained toward
+    -sqrt(latency); `predict` returns max(0, -o)^2 seconds."""
+
+    def __init__(self, meta: WorkloadMeta, *, agent=None, net: str = "treecnn",
+                 hidden: int = 96, head_hidden: int = 96, seed: int = 0,
+                 lr: float = 1e-3):
+        self.meta = meta
+        if agent is not None:
+            from repro.checkpoint import copy_tree
+            net, hidden = agent.cfg.net, agent.cfg.hidden
+            self.params = copy_tree(agent.critic)     # warm start, no alias
+        else:
+            k = jax.random.split(jax.random.PRNGKey(seed), 2)
+            self.params = {
+                "enc": nets.init_encoder(k[0], net, meta.feat_dim, hidden,
+                                         MAX_NODES),
+                "head": nets.init_mlp_head(k[1], hidden, head_hidden, 1)}
+        self.net = net
+        self.opt = adamw_init(self.params)
+        self._cfg = AdamWConfig(lr=lr, weight_decay=0.0, grad_clip=5.0)
+        self.n_fit_steps = 0
+        self.generation = 0               # bumped per fit(); fences the memo
+        # keyed by the (frozen, value-hashed) Query itself — names are not
+        # unique across tenants, but structurally distinct queries must
+        # never share a prediction
+        self._enc_memo: Dict[object, tuple] = {}
+        self._pred_memo: Dict[object, float] = {}
+
+        def forward(params, feat, left, right, mask):
+            h = nets.apply_encoder(params["enc"], self.net, feat, left,
+                                   right, mask)
+            return nets.apply_mlp_head(params["head"], h)[:, 0]
+
+        def loss_fn(params, batch):
+            o = forward(params, batch["feat"], batch["left"], batch["right"],
+                        batch["mask"])
+            err = (o - batch["target"]) ** 2
+            return jnp.sum(err * batch["valid"]) / \
+                jnp.maximum(batch["valid"].sum(), 1.0)
+
+        def update(params, opt, batch):
+            l, g = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt, _ = adamw_update(params, g, opt, self._cfg)
+            return params, opt, l
+
+        self._forward = jax.jit(forward)
+        self._update = jax.jit(update, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------ predict
+    def predict_enc(self, enc) -> float:
+        """Predicted latency (virtual seconds) for one encoded state."""
+        feat, left, right, mask = enc
+        o = float(self._forward(self.params, feat[None], left[None],
+                                right[None], mask[None])[0])
+        return max(0.0, -o) ** 2
+
+    def predict_query(self, query) -> float:
+        """Predicted latency for `query`'s syntactic plan (memoized — the
+        encoding is a pure function of the query, and predictions only
+        change when `fit` bumps the generation)."""
+        hit = self._pred_memo.get(query)
+        if hit is not None:
+            return hit
+        enc = self._enc_memo.get(query)
+        if enc is None:
+            enc = self._enc_memo[query] = encode_query(query, self.meta)
+        p = self.predict_enc(enc)
+        self._pred_memo[query] = p
+        return p
+
+    # ---------------------------------------------------------------- fit
+    def fit(self, encs: List[tuple], latencies: List[float], *,
+            batch_size: int = 16, epochs: int = 1) -> float:
+        """Regress o(enc) -> -sqrt(latency) with jitted AdamW steps over
+        fixed-shape padded batches. Returns the last batch loss."""
+        assert len(encs) == len(latencies) and encs
+        F = self.meta.feat_dim
+        n = len(encs)
+        last = 0.0
+        for _ in range(epochs):
+            for s in range(0, n, batch_size):
+                chunk = list(range(s, min(s + batch_size, n)))
+                feat = np.zeros((batch_size, MAX_NODES, F), np.float32)
+                left = np.zeros((batch_size, MAX_NODES), np.int32)
+                right = np.zeros((batch_size, MAX_NODES), np.int32)
+                mask = np.zeros((batch_size, MAX_NODES), np.float32)
+                target = np.zeros(batch_size, np.float32)
+                valid = np.zeros(batch_size, np.float32)
+                for bi, i in enumerate(chunk):
+                    feat[bi], left[bi], right[bi], mask[bi] = encs[i]
+                    target[bi] = -np.sqrt(max(latencies[i], 0.0))
+                    valid[bi] = 1.0
+                batch = {"feat": jnp.asarray(feat), "left": jnp.asarray(left),
+                         "right": jnp.asarray(right),
+                         "mask": jnp.asarray(mask),
+                         "target": jnp.asarray(target),
+                         "valid": jnp.asarray(valid)}
+                self.params, self.opt, l = self._update(self.params,
+                                                        self.opt, batch)
+                self.n_fit_steps += 1
+                last = float(l)
+        self.generation += 1
+        self._pred_memo.clear()
+        return last
+
+    def fit_from_replay(self, replay, rng: np.random.Generator, *,
+                        n_samples: int = 64, batch_size: int = 16,
+                        epochs: int = 2,
+                        current_versions: Optional[Dict] = None) -> float:
+        """Train from harvested serving experience (PR-3 replay buffer).
+        Uses each trajectory's FIRST state — the pre-exec encoding the
+        predictor sees at admission — against the realized latency (the
+        timeout for failed runs, matching how the scheduler charges them).
+        Prioritized sampling keeps the regression pointed at the fresh,
+        high-regret traffic. Deterministic given `rng`."""
+        exps = [e for e in replay.sample(min(n_samples, len(replay)), rng,
+                                         current_versions)
+                if e.traj.states]
+        if not exps:
+            return 0.0
+        return self.fit([e.traj.states[0] for e in exps],
+                        [e.latency for e in exps],
+                        batch_size=batch_size, epochs=epochs)
+
+    def stats(self) -> Dict[str, float]:
+        return {"fit_steps": self.n_fit_steps, "generation": self.generation,
+                "memo_entries": len(self._pred_memo)}

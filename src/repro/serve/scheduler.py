@@ -4,7 +4,10 @@ Each lane holds at most one in-flight query, suspended at its next stage
 boundary. One scheduler tick:
 
   1. admit — every idle lane is immediately refilled from the admission
-     queue (FCFS, earliest-free lane first); a delta batch at the head of
+     queue (FCFS by default; policy="edf" or an installed
+     `serve.qos.AdmissionPolicy` picks earliest-deadline-first with
+     fair-share tie-breaks, and may defer, degrade or reject — see
+     qos/admission.py); a delta batch at the head of
      the queue is a write barrier: it applies once every previously
      admitted query has drained, and every query behind it sees the new
      table version;
@@ -46,6 +49,7 @@ import numpy as np
 from repro.core.actions import action_mask, apply_action
 from repro.core.encoding import MAX_NODES, encode_state
 from repro.core.rollout import Trajectory, as_key, finalize_trajectory
+from repro.serve.cache import PartitionedStageCache
 from repro.serve.deltas import DeltaBatch, apply_delta
 from repro.sql.cbo import Estimator
 from repro.sql.cluster import ClusterModel
@@ -56,12 +60,18 @@ from repro.sql.plans import syntactic_plan
 @dataclasses.dataclass
 class Arrival:
     """One item of the admission stream: a query (with its PRNG seed) or a
-    delta batch, arriving at virtual time `t`."""
+    delta batch, arriving at virtual time `t`. Multi-tenant streams tag
+    each arrival with a `tenant` and (optionally) an absolute virtual
+    `deadline`; `not_before` is written by admission deferrals (token-
+    bucket rate limits) and floors the admit time."""
     t: float
     query: object = None
     seed: object = None
     delta: Optional[DeltaBatch] = None
     seq: int = -1                     # stream position, assigned by run()
+    tenant: str = "default"
+    deadline: Optional[float] = None  # absolute virtual-clock deadline
+    not_before: float = 0.0           # admission deferral floor
 
 
 @dataclasses.dataclass
@@ -76,6 +86,11 @@ class Completion:
     tick: int                         # scheduler tick at which it finished
     traj: Trajectory
     result: RunResult
+    tenant: str = "default"
+    deadline: Optional[float] = None
+    hook_budget: Optional[int] = None  # None = agent default (full budget)
+    degraded: bool = False             # admission shrank the hook budget
+    predicted: Optional[float] = None  # admission-time latency estimate
 
     @property
     def latency(self) -> float:
@@ -85,6 +100,30 @@ class Completion:
     @property
     def service_t(self) -> float:
         return self.finish_t - self.admit_t
+
+    @property
+    def queue_wait(self) -> float:
+        """Virtual time spent in the admission queue before a lane."""
+        return self.admit_t - self.arrival_t
+
+    @property
+    def slo_miss(self) -> bool:
+        return self.deadline is not None and self.finish_t > self.deadline
+
+
+@dataclasses.dataclass
+class Rejection:
+    """A query turned away at admission (predicted-hopeless): it never
+    occupies a lane and produces no Completion."""
+    seq: int
+    query: object
+    seed: object
+    tenant: str
+    arrival_t: float
+    reject_t: float                   # virtual time of the decision
+    deadline: Optional[float]
+    predicted: Optional[float]
+    reason: str
 
 
 @dataclasses.dataclass
@@ -98,6 +137,9 @@ class _Lane:
     extra_plan: float = 0.0
     arrival: Optional[Arrival] = None
     admit_t: float = 0.0
+    hook_budget: Optional[int] = None  # admission-assigned (None = full)
+    degraded: bool = False
+    predicted: Optional[float] = None
 
     @property
     def next_event(self) -> float:
@@ -110,6 +152,10 @@ class LaneScheduler:
     call per tick over every gathered suspension point.
 
     policy   "async"    — work-conserving: finished lanes refill at once.
+             "edf"      — async, but idle lanes take the pending query
+                          with the EARLIEST DEADLINE (ties: stream order)
+                          from the segment ahead of the next write
+                          barrier, instead of strict FCFS.
              "lockstep" — barriered waves of n_lanes (the PR-1 engine).
     window   batching horizon in virtual seconds: a tick decides only the
              lanes suspended within `window` of the earliest pending
@@ -117,22 +163,35 @@ class LaneScheduler:
              suspended lanes). Affects host batching and tick ordering
              only — per-query plans, latencies and completion times are
              window-independent.
+    admission  optional `serve.qos.AdmissionPolicy`: overrides the pick
+             among pending queries (EDF + fair share), and may defer
+             (rate limits), degrade (shrunken hook budget) or reject
+             queries. None keeps the PR-2 FCFS path bit-identical.
     """
 
     def __init__(self, db, est: Estimator, agent, *, n_lanes: int = 4,
                  stage: int = 3, explore: bool = False,
                  cluster: Optional[ClusterModel] = None,
                  policy: str = "async", window: Optional[float] = None,
-                 reuse_stages: bool = True):
-        assert policy in ("async", "lockstep"), policy
+                 reuse_stages: bool = True, admission=None):
+        assert policy in ("async", "edf", "lockstep"), policy
+        assert admission is None or policy != "lockstep", \
+            "admission control needs per-lane refill (async/edf)"
         self.db, self.est, self.agent = db, est, agent
         self.n_lanes, self.stage, self.explore = n_lanes, stage, explore
         self.cluster = cluster if cluster is not None else ClusterModel()
         self.policy = policy
         self.window = None if policy == "lockstep" else window
         self.reuse_stages = reuse_stages
+        if admission is None and policy == "edf":
+            # lazy: scheduler must stay importable without pulling the
+            # whole qos package at module load
+            from repro.serve.qos.admission import EdfPolicy
+            admission = EdfPolicy()
+        self.admission = admission
         self.lanes = [_Lane(i) for i in range(n_lanes)]
         self.completions: List[Completion] = []
+        self.rejections: List[Rejection] = []
         self.delta_log: List[tuple] = []
         self.ticks = 0
         self.decide_sizes: List[int] = []
@@ -145,13 +204,23 @@ class LaneScheduler:
         # `self.agent`'s params or `self.stage` and the change
         # deterministically takes effect from the next tick on.
         self.on_complete: List[Callable[[Completion], None]] = []
+        if admission is not None:     # after on_complete: attach hooks it
+            admission.attach(self)
 
     # ------------------------------------------------------------- driving
     def run(self, stream: Sequence[Arrival]) -> List[Completion]:
         """Drain `stream` (any order; stable-sorted by arrival time) and
-        return one Completion per query, in stream order."""
+        return one Completion per admitted query, in stream order
+        (admission-rejected queries land in `self.rejections`)."""
+        # work on COPIES: admission mutates per-run state on arrivals
+        # (deferral not_before, stamped default deadlines), and the
+        # caller's stream must replay identically through another
+        # scheduler — e.g. the QoS-off bit-identity comparisons
+        stream = [dataclasses.replace(a) for a in stream]
         for i, a in enumerate(stream):
             a.seq = i
+        if self.admission is not None:
+            self.admission.prepare(stream)
         pending = deque(sorted(stream, key=lambda a: a.t))
         while True:
             self._admit(pending)
@@ -194,8 +263,21 @@ class LaneScheduler:
             idle = [l for l in self.lanes if l.run is None]
             if not idle:
                 return
+            # selection: FCFS takes the head; an admission policy (EDF is
+            # `qos.EdfPolicy`, auto-installed for policy="edf") picks from
+            # the whole segment ahead of the next write barrier (a delta
+            # stays a barrier: nothing behind it is eligible)
+            if self.admission is not None:
+                seg = []
+                for a in pending:
+                    if a.delta is not None:
+                        break
+                    seg.append(a)
+                now = max(min(l.free_at for l in idle), self._write_ts)
+                item = self.admission.select(seg, now)
             lane = min(idle, key=lambda l: (max(item.t, l.free_at), l.idx))
-            start_t = max(item.t, lane.free_at, self._write_ts)
+            start_t = max(item.t, item.not_before, lane.free_at,
+                          self._write_ts)
             # FCFS on the virtual clock: an in-flight lane frees no earlier
             # than its current stage boundary, so only take the idle lane
             # once no busy lane can possibly beat it — otherwise defer and
@@ -207,20 +289,50 @@ class LaneScheduler:
                  if l.run is not None), default=np.inf)
             if start_t > busy_bound:
                 return
-            pending.popleft()
-            self._start(lane, item, start_t)
+            budget, degraded, predicted = None, False, None
+            if self.admission is not None:
+                dec = self.admission.admit(item, start_t)
+                if dec.action == "reject":
+                    pending.remove(item)
+                    self.rejections.append(Rejection(
+                        seq=item.seq, query=item.query, seed=item.seed,
+                        tenant=item.tenant, arrival_t=item.t,
+                        reject_t=start_t, deadline=item.deadline,
+                        predicted=dec.predicted, reason=dec.reason))
+                    continue
+                if dec.action == "defer":
+                    # rate-limited: floor the admit time and re-select —
+                    # the raised not_before feeds straight into start_t,
+                    # so one retry later this same arrival admits cleanly
+                    item.not_before = max(item.not_before, dec.not_before)
+                    continue
+                budget, degraded = dec.hook_budget, dec.degraded
+                predicted = dec.predicted
+            pending.remove(item)
+            self._start(lane, item, start_t, hook_budget=budget,
+                        degraded=degraded, predicted=predicted)
 
-    def _start(self, lane: _Lane, arrival: Arrival, admit_t: float) -> None:
+    def _start(self, lane: _Lane, arrival: Arrival, admit_t: float, *,
+               hook_budget: Optional[int] = None, degraded: bool = False,
+               predicted: Optional[float] = None) -> None:
         q = arrival.query
+        steps = self.agent.cfg.max_steps if hook_budget is None \
+            else min(hook_budget, self.agent.cfg.max_steps)
+        cache = None
+        shared = getattr(self.db, "_stage_cache", None)
+        if self.reuse_stages and isinstance(shared, PartitionedStageCache):
+            cache = shared.partition(arrival.tenant)
         run = AdaptiveRun(self.db, q, syntactic_plan(q), self.est,
-                          self.cluster,
-                          max_hook_steps=self.agent.cfg.max_steps,
-                          plan_time=0.0, reuse_stages=self.reuse_stages)
+                          self.cluster, max_hook_steps=steps,
+                          plan_time=0.0, reuse_stages=self.reuse_stages,
+                          cache=cache)
         lane.run, lane.traj = run, Trajectory()
         lane.key = as_key(arrival.seed if arrival.seed is not None
                           else lane.idx)
         lane.extra_plan = 0.0
         lane.arrival, lane.admit_t = arrival, admit_t
+        lane.hook_budget, lane.degraded = hook_budget, degraded
+        lane.predicted = predicted
         lane.state = run.start()
         if lane.state is None:        # ran to completion with no boundary
             self._finish(lane)
@@ -300,9 +412,12 @@ class LaneScheduler:
         comp = Completion(
             seq=arr.seq, query=arr.query, seed=arr.seed, arrival_t=arr.t,
             admit_t=lane.admit_t, finish_t=finish_t, lane=lane.idx,
-            tick=self.ticks, traj=traj, result=res)
+            tick=self.ticks, traj=traj, result=res, tenant=arr.tenant,
+            deadline=arr.deadline, hook_budget=lane.hook_budget,
+            degraded=lane.degraded, predicted=lane.predicted)
         self.completions.append(comp)
         lane.free_at = finish_t
         lane.run = lane.state = lane.arrival = None
+        lane.hook_budget, lane.degraded, lane.predicted = None, False, None
         for cb in self.on_complete:
             cb(comp)

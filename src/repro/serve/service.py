@@ -5,9 +5,16 @@ serving metrics.
 service instance starts with cold, independently-budgeted cache state),
 runs an arrival stream through a `LaneScheduler`, and distills the
 completions into the numbers a serving benchmark cares about: throughput
-(qps on the virtual clock), p50/p99 query latency (queueing + execution),
-cache hit rate, and the host-side cost of the policy (decision batches per
-tick, hook seconds per query).
+(qps on the virtual clock), p50/p99 query latency (queueing + execution)
+with the queue-wait/in-lane breakdown, cache hit rate, and the host-side
+cost of the policy (decision batches per tick, hook seconds per query).
+
+With a `TenantRegistry` the cache becomes per-tenant partitions
+(`PartitionedStageCache`) and the stats gain a per-tenant breakdown —
+qps, p50/p99, SLO-miss rate, rejected/degraded counts, partition cache
+counters; with an `AdmissionPolicy` (`serve.qos`) the scheduler runs
+admission control / EDF / degradation. Both default to off, keeping the
+PR-2/PR-3 serving path bit-identical.
 """
 from __future__ import annotations
 
@@ -16,10 +23,38 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.serve.cache import StageCache
-from repro.serve.scheduler import Arrival, Completion, LaneScheduler
+from repro.serve.cache import PartitionedStageCache, StageCache
+from repro.serve.scheduler import (Arrival, Completion, LaneScheduler,
+                                   Rejection)
 from repro.sql.cbo import Estimator
 from repro.sql.cluster import ClusterModel
+
+
+def _round_floats(x):
+    if isinstance(x, float):
+        return round(x, 4)
+    if isinstance(x, dict):
+        return {k: _round_floats(v) for k, v in x.items()}
+    return x
+
+
+@dataclasses.dataclass
+class TenantStats:
+    """Per-tenant slice of a serving run (virtual-clock metrics)."""
+    n_completed: int = 0
+    n_failed: int = 0
+    n_rejected: int = 0
+    n_degraded: int = 0
+    n_slo_miss: int = 0               # completed past their deadline
+    slo_miss_rate: float = 0.0        # misses / completed-with-deadline
+    qps: float = 0.0                  # completions / global makespan
+    latency_p50: float = 0.0
+    latency_p99: float = 0.0
+    queue_wait_mean: float = 0.0
+    cache: Optional[Dict[str, float]] = None   # this tenant's partition
+
+    def as_dict(self) -> Dict:
+        return _round_floats(dataclasses.asdict(self))
 
 
 @dataclasses.dataclass
@@ -31,18 +66,28 @@ class ServiceStats:
     latency_mean: float              # arrival -> completion, virtual secs
     latency_p50: float
     latency_p99: float
-    service_mean: float              # admission -> completion (no queueing)
+    service_mean: float              # in-lane: admission -> completion
     cache: Optional[Dict[str, float]]
     ticks: int
     mean_decide_batch: float
     hook_seconds: float              # total host-side policy cost
+    queue_wait_mean: float = 0.0     # in admission queue: arrival -> admit
+    queue_wait_p99: float = 0.0
+    n_rejected: int = 0              # turned away at admission
+    n_degraded: int = 0              # admitted with a shrunken hook budget
+    n_slo_miss: int = 0
+    slo_miss_rate: float = 0.0       # over completed queries with deadlines
+    per_tenant: Optional[Dict[str, TenantStats]] = None
 
     def as_dict(self) -> Dict:
         d = dataclasses.asdict(self)
-        for k, v in d.items():
-            if isinstance(v, float):
-                d[k] = round(v, 4)
-        return d
+        return _round_floats(d)
+
+
+def _slo_counts(comps: List[Completion]) -> Tuple[int, float]:
+    with_dl = [c for c in comps if c.deadline is not None]
+    n_miss = sum(c.slo_miss for c in with_dl)
+    return n_miss, (n_miss / len(with_dl) if with_dl else 0.0)
 
 
 class QueryService:
@@ -53,13 +98,20 @@ class QueryService:
                  policy: str = "async", window: Optional[float] = None,
                  cache_bytes: int = 256 * 1024 * 1024,
                  reuse_stages: bool = True, explore: bool = False,
-                 hooks: Sequence = ()):
+                 hooks: Sequence = (), tenants=None, admission=None):
         """`hooks` are objects with an `attach(scheduler)` method (e.g. the
         lifelong-learning loop's `learn.TrajectoryHarvester` /
         `learn.BackgroundLearner`); each is attached to every scheduler
         this service creates, in order. `explore=True` samples the policy
         instead of taking argmax — the online loop uses it to keep
-        gathering off-greedy experience while serving."""
+        gathering off-greedy experience while serving.
+
+        `tenants` (a `serve.qos.TenantRegistry`) partitions the stage
+        cache per tenant (each spec's `cache_bytes`, else `cache_bytes`)
+        and switches the stats to a per-tenant breakdown. `admission` (a
+        `serve.qos.AdmissionPolicy`) plugs admission control into every
+        scheduler this service creates. Both None = the PR-2 path,
+        bit-identical."""
         self.db = db
         self.agent = agent
         self.est = est if est is not None else Estimator(db, db.stats)
@@ -68,8 +120,20 @@ class QueryService:
         self.reuse_stages = reuse_stages
         self.explore = explore
         self.hooks = list(hooks)
+        self.tenants = tenants
+        self.admission = admission
         if reuse_stages:
-            self.cache = StageCache(max_bytes=cache_bytes)
+            if tenants is not None:
+                # every REGISTERED tenant gets its own partition (explicit
+                # budget or the service default); unregistered ids share
+                # the default partition, so memory stays bounded
+                budgets = {t: tenants.spec(t).cache_bytes
+                           if tenants.spec(t).cache_bytes is not None
+                           else cache_bytes for t in tenants.tenants}
+                self.cache = PartitionedStageCache(
+                    default_bytes=cache_bytes, budgets=budgets)
+            else:
+                self.cache = StageCache(max_bytes=cache_bytes)
             db._stage_cache = self.cache     # shared by every AdaptiveRun
         else:
             self.cache = None
@@ -81,7 +145,8 @@ class QueryService:
         self.scheduler = LaneScheduler(
             self.db, self.est, self.agent, n_lanes=self.n_lanes,
             explore=self.explore, cluster=self.cluster, policy=self.policy,
-            window=self.window, reuse_stages=self.reuse_stages)
+            window=self.window, reuse_stages=self.reuse_stages,
+            admission=self.admission)
         for h in self.hooks:
             h.attach(self.scheduler)
         comps = self.scheduler.run(list(stream))
@@ -95,18 +160,59 @@ class QueryService:
         return self.run([Arrival(0.0, query=q, seed=s)
                          for q, s in zip(queries, seeds)])
 
+    # -------------------------------------------------------------- stats
+    def _cache_dict(self) -> Optional[Dict[str, float]]:
+        if self.cache is None:
+            return None
+        if isinstance(self.cache, PartitionedStageCache):
+            return self.cache.aggregate_stats()
+        return self.cache.stats.as_dict()
+
+    def _tenant_stats(self, comps: List[Completion],
+                      rejects: List[Rejection], makespan: float) \
+            -> Dict[str, TenantStats]:
+        names = sorted({c.tenant for c in comps} |
+                       {r.tenant for r in rejects} |
+                       (set(self.tenants.tenants)
+                        if self.tenants is not None else set()))
+        parts = self.cache.partitions() \
+            if isinstance(self.cache, PartitionedStageCache) else {}
+        out = {}
+        for name in names:
+            cs = [c for c in comps if c.tenant == name]
+            n_miss, miss_rate = _slo_counts(cs)
+            lat = np.asarray([c.latency for c in cs]) if cs else None
+            part = parts.get(name)
+            out[name] = TenantStats(
+                n_completed=len(cs),
+                n_failed=sum(c.result.failed for c in cs),
+                n_rejected=sum(r.tenant == name for r in rejects),
+                n_degraded=sum(c.degraded for c in cs),
+                n_slo_miss=n_miss, slo_miss_rate=miss_rate,
+                qps=len(cs) / max(makespan, 1e-9),
+                latency_p50=float(np.percentile(lat, 50)) if cs else 0.0,
+                latency_p99=float(np.percentile(lat, 99)) if cs else 0.0,
+                queue_wait_mean=float(np.mean([c.queue_wait for c in cs]))
+                if cs else 0.0,
+                cache=part.stats.as_dict() if part is not None else None)
+        return out
+
     def _stats(self, comps: List[Completion]) -> ServiceStats:
         sched = self.scheduler
+        rejects = sched.rejections
         # NB: `if self.cache` would be False for an EMPTY cache (StageCache
         # defines __len__) — the None-check matters on the empty-stream path
         if not comps:
-            return ServiceStats(0, 0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0,
-                                self.cache.stats.as_dict()
-                                if self.cache is not None else None,
-                                sched.ticks, 0.0, 0.0)
+            return ServiceStats(
+                0, 0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, self._cache_dict(),
+                sched.ticks, 0.0, 0.0, n_rejected=len(rejects),
+                per_tenant=self._tenant_stats([], rejects, 0.0)
+                if self.tenants is not None else None)
         lat = np.asarray([c.latency for c in comps])
+        wait = np.asarray([c.queue_wait for c in comps])
         first = min(c.arrival_t for c in comps)
         makespan = max(c.finish_t for c in comps) - first
+        n_miss, miss_rate = _slo_counts(comps)
         return ServiceStats(
             n_completed=len(comps),
             n_failed=sum(c.result.failed for c in comps),
@@ -116,10 +222,15 @@ class QueryService:
             latency_p50=float(np.percentile(lat, 50)),
             latency_p99=float(np.percentile(lat, 99)),
             service_mean=float(np.mean([c.service_t for c in comps])),
-            cache=self.cache.stats.as_dict()
-            if self.cache is not None else None,
+            cache=self._cache_dict(),
             ticks=sched.ticks,
             mean_decide_batch=float(np.mean(sched.decide_sizes))
             if sched.decide_sizes else 0.0,
             hook_seconds=float(sum(c.traj.hook_seconds for c in comps)),
-        )
+            queue_wait_mean=float(wait.mean()),
+            queue_wait_p99=float(np.percentile(wait, 99)),
+            n_rejected=len(rejects),
+            n_degraded=sum(c.degraded for c in comps),
+            n_slo_miss=n_miss, slo_miss_rate=miss_rate,
+            per_tenant=self._tenant_stats(comps, rejects, makespan)
+            if self.tenants is not None else None)

@@ -127,18 +127,23 @@ class Executor:
     _ENTRY_MAX_BYTES = 32 * 1024 * 1024    #   caches; huge stages not pinned
 
     def __init__(self, db: Database, cluster: Optional[ClusterModel] = None,
-                 reuse_stages: bool = True):
+                 reuse_stages: bool = True,
+                 cache: Optional[StageCache] = None):
         self.db = db
         self.cluster = cluster if cluster is not None else ClusterModel()
-        if reuse_stages:
+        if not reuse_stages:
+            self._cache = None
+        elif cache is not None:
+            # explicit cache (e.g. one tenant's partition of a
+            # serve.cache.PartitionedStageCache, routed by the scheduler)
+            self._cache = cache
+        else:
             cache = getattr(db, "_stage_cache", None)
             if not isinstance(cache, StageCache):
                 cache = StageCache(self._CACHE_MAX_BYTES,
                                    self._ENTRY_MAX_BYTES)
                 db._stage_cache = cache
             self._cache = cache
-        else:
-            self._cache = None
 
     @property
     def cache_stats(self):
@@ -370,7 +375,8 @@ class AdaptiveRun:
                  max_hook_steps: int = 3,
                  plan_time: float = 0.0,
                  aqe_switching: bool = True,
-                 reuse_stages: bool = True):
+                 reuse_stages: bool = True,
+                 cache: Optional[StageCache] = None):
         self.cluster = cluster if cluster is not None else ClusterModel()
         self.query = query
         self.max_hook_steps = max_hook_steps
@@ -379,7 +385,8 @@ class AdaptiveRun:
         self.state = RuntimeState(query, copy_plan(plan), {}, est, 0, 0.0, 0,
                                   self.cluster)
         self.result: Optional[RunResult] = None
-        self._ex = Executor(db, self.cluster, reuse_stages=reuse_stages)
+        self._ex = Executor(db, self.cluster, reuse_stages=reuse_stages,
+                            cache=cache)
         self._stages: List[StageRecord] = []
         self._tot_shuffles = 0
         self._tot_sbytes = 0.0

@@ -69,6 +69,40 @@ def test_stage_cache_lru_eviction_not_clear_all():
     assert s["hits"] == 2 and s["misses"] == 2 and s["evictions"] == 2
 
 
+def test_stage_cache_oversized_entry_and_zero_budget():
+    # an entry larger than the WHOLE budget is refused outright: no
+    # eviction storm, resident entries untouched, counters unchanged
+    c = StageCache(max_bytes=100, max_entry_bytes=1000)
+    assert c.put(("a",), "x", 60)
+    assert not c.put(("big",), "y", 101)
+    assert len(c) == 1 and c.bytes == 60 and c.stats.evictions == 0
+    assert c.get(("a",)) == "x"
+    # budget = 0: nothing with real bytes is ever admitted or evicted
+    z = StageCache(max_bytes=0)
+    assert not z.put(("s",), "x", 1)
+    assert len(z) == 0 and z.bytes == 0 and z.stats.evictions == 0
+    assert z.get(("s",)) is None and z.stats.misses == 1
+
+
+def test_stage_cache_eviction_counter_consistency():
+    """admitted - evicted == resident at every point, including refreshes
+    of an existing signature (which must not double-count bytes)."""
+    c = StageCache(max_bytes=100, max_entry_bytes=100)
+    admitted = sum(c.put(("sig", i), i, 27) for i in range(20))
+    assert admitted == 20
+    assert admitted - c.stats.evictions == len(c)
+    assert c.bytes == 27 * len(c) <= c.max_bytes
+    # refreshing a resident sig with a new size replaces, never duplicates
+    # — and is not an eviction: the counters keep adding up
+    sig = next(iter(c._entries))
+    before, evictions_before = len(c), c.stats.evictions
+    c.put(sig, "new", 10)
+    assert len(c) == before
+    assert c.bytes == 27 * (len(c) - 1) + 10
+    assert c.stats.evictions == evictions_before
+    assert admitted - c.stats.evictions == len(c)
+
+
 def test_executor_exposes_cache_stats_and_hits(job_workload):
     db = fresh_db(scale=0.05)
     est = Estimator(db, db.stats)
