@@ -1,0 +1,366 @@
+"""Drift control-plane benchmark: re-ANALYZE policies x online predictor
+refresh under a drifting delta workload — feeds results/BENCH_drift.json.
+
+The world starts with a YOUNG movie_info table (90% of its rows deleted
+before ANALYZE runs), so the catalog honestly describes a small fact
+table. Serving uses the classical CBO re-plan policy
+(`baselines.CboReplanAgent`: re-optimize every query at admission against
+the CURRENT statistics) — the natural probe for stats quality, with no RL
+confound. Mid-stream, one growth delta multiplies movie_info ~25x: the
+cost-based order that was right for the small table (fact-fact first,
+cast_info x movie_info) now blows past the materialize cap, so every
+"stats-trap" template OOMs into the 45s timeout under STALE statistics,
+while fresh statistics flip the join order to go through the filtered
+title first (sub-second). Churn deltas on movie_keyword keep bumping
+versions afterwards.
+
+The SAME stream is replayed through 8 arms: RefreshPolicy in
+{never, always, threshold, budgeted} x predictor-refresh in {off, on},
+all under EDF + QoS admission (deadline-aware, latency predictor
+calibrated ONE-SHOT pre-serve from a harvested calibration pass):
+
+  never      the paper's stale-stats premise (and PR-4's behavior):
+             bit-identical to a run with no drift control plane at all
+             (checked against a 9th plain pass);
+  always /   auto re-ANALYZE at the delta barrier (the controller reacts
+  threshold  on_delta, so the refresh costs zero extra drain); traps
+             never fail because the first post-delta query already plans
+             on fresh stats;
+  budgeted   same, under a hard modeled-cost ceiling: the one big
+             movie_info refresh fits, the churn-table scans do not;
+  refresh-on `LatencyPredictor.refit_on_drift` from the live replay
+             buffer: under "never" the ONLY defense — after the first
+             trap burns a lane for the full timeout, the refit teaches
+             admission to REJECT hopeless traps, protecting the lane
+             pool (online adaptation vs re-ANALYZE, priced head to head).
+
+Per arm: p50/p99 (whole stream + post-drift), failures, SLO-miss rate,
+rejections, goodput, and the EXPLICIT re-ANALYZE cost charge (modeled
+virtual seconds — also pushed onto the clock via charge_virtual — plus
+measured wall seconds) and refit count. All latencies are virtual-clock,
+so every comparison except wall times is deterministic.
+
+  PYTHONPATH=src python -m benchmarks.bench_drift [--smoke]
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_args, csv_line, emit_bench_json
+
+SLO = 10.0                      # per-query deadline (virtual seconds)
+TIMEOUT = 45.0                  # shortened so failures complete mid-stream
+TRAP_EVERY = 5
+SHRINK_SEED = 7                 # the young-movie_info world build
+GROWTH_X = 24                   # append 24x current rows at the drift point
+
+
+# ------------------------------------------------------------------ world
+def _build_world(scale: float):
+    """JOB-like db whose movie_info is young and small, with statistics
+    taken THEN: the catalog is in sync at serve start and goes stale the
+    moment the growth delta lands."""
+    from repro.serve.deltas import DeltaBatch, apply_delta
+    from repro.sql import datagen
+    from repro.sql.catalog import analyze
+    from repro.sql.cbo import Estimator
+
+    db = datagen.make_job_like(scale=scale, seed=0)
+    apply_delta(db, DeltaBatch("movie_info", delete_frac=0.9,
+                               seed=SHRINK_SEED))
+    # analyze() stamps the versions it saw, so the shrink above is part
+    # of the catalog's baseline — only LATER deltas count as drift
+    db.stats = analyze(db, rng=np.random.default_rng(0))
+    return db, Estimator(db, db.stats)
+
+
+def _trap(i: int, year: int):
+    """Fact-fact-first syntactically; the CBO order depends on |movie_info|:
+    small => (ci x mi) first (cheapest by C_out), grown => through the
+    filtered title. The stale catalog keeps saying 'small'."""
+    from repro.sql.query import Filter, JoinCond, Query, Relation
+    return Query(f"statstrap_{i}",
+                 (Relation("ci", "cast_info", ()),
+                  Relation("mi", "movie_info", ()),
+                  Relation("t", "title",
+                           (Filter("production_year", "<=", (year,)),))),
+                 (JoinCond("ci", "movie_id", "mi", "movie_id"),
+                  JoinCond("t", "id", "ci", "movie_id")))
+
+
+def _stream(wl, db, *, n_queries, rate, seed, drift_at, churn_every):
+    from repro.serve.deltas import DeltaBatch
+    from repro.serve.scheduler import Arrival
+    from benchmarks.bench_serve import fast_subset
+
+    rng = np.random.default_rng(seed)
+    fast = fast_subset(wl)[:10]
+    traps = [_trap(i, 1940 + 5 * i) for i in range(5)]
+    mi_rows = db.table("movie_info").nrows      # post-shrink
+    mk_rows = db.table("movie_keyword").nrows
+    t, out, since_churn = 0.0, [], 0
+    for i in range(n_queries):
+        t += float(rng.exponential(1.0 / rate))
+        q = traps[(i // TRAP_EVERY) % len(traps)] if i % TRAP_EVERY == 0 \
+            else fast[i % len(fast)]
+        out.append(Arrival(t, query=q, seed=int(rng.integers(2 ** 31)),
+                           deadline=t + SLO))
+        if i + 1 == drift_at:
+            out.append(Arrival(t, delta=DeltaBatch(
+                "movie_info", n_append=GROWTH_X * mi_rows, seed=999)))
+        elif i + 1 > drift_at:
+            since_churn += 1
+            if since_churn >= churn_every:
+                since_churn = 0
+                out.append(Arrival(t, delta=DeltaBatch(
+                    "movie_keyword", n_append=mk_rows // 50,
+                    delete_frac=0.02, seed=1000 + i)))
+    return out
+
+
+# ------------------------------------------------------------- calibration
+def _calibrate_replay(wl, meta, *, scale, n_lanes, cluster, smoke):
+    """Pre-serve calibration pass: serve a pre-drift mix (traps included —
+    they are sub-second on the young table) and harvest latencies into a
+    replay buffer every arm's one-shot predictor fit draws from."""
+    from repro.learn import ReplayBuffer, TrajectoryHarvester
+    from repro.serve.scheduler import Arrival
+    from repro.serve.service import QueryService
+    from benchmarks.bench_serve import fast_subset
+    from repro.baselines import CboReplanAgent
+
+    db, est = _build_world(scale)
+    fast = fast_subset(wl)[:10]
+    traps = [_trap(i, 1940 + 5 * i) for i in range(5)]
+    rng = np.random.default_rng(29)
+    n_cal = 20 if smoke else 50
+    t, stream = 0.0, []
+    for i in range(n_cal):
+        t += float(rng.exponential(0.5))
+        q = traps[i % len(traps)] if i % 4 == 0 else fast[i % len(fast)]
+        stream.append(Arrival(t, query=q, seed=int(rng.integers(2 ** 31))))
+    rb = ReplayBuffer(capacity=256)
+    QueryService(db, CboReplanAgent(meta), est=est, n_lanes=n_lanes,
+                 cluster=cluster,
+                 hooks=[TrajectoryHarvester(rb)]).run(stream)
+    return rb
+
+
+def _one_shot_predictor(meta, cal_replay, *, smoke):
+    """The PR-4 style calibration: fit once pre-serve, never again
+    (unless an arm's controller refits it on drift)."""
+    from repro.serve.qos import LatencyPredictor
+    pred = LatencyPredictor(meta, seed=5, lr=5e-3)
+    rng = np.random.default_rng(7)
+    for _ in range(6 if smoke else 12):
+        pred.fit_from_replay(cal_replay, rng, n_samples=48, batch_size=16,
+                             epochs=3)
+    return pred
+
+
+# ------------------------------------------------------------------- arms
+def _make_policy(kind, analyze_cost_s):
+    from repro.serve.drift import RefreshPolicy
+    if kind == "budgeted":
+        # room for the one big movie_info refresh, not for churn scans
+        return RefreshPolicy("budgeted", threshold=0.25,
+                             budget_s=1.5 * analyze_cost_s)
+    if kind == "threshold":
+        return RefreshPolicy("threshold", threshold=1.0)
+    return RefreshPolicy(kind)
+
+
+def _serve_arm(kind, refresh_on, *, stream, meta, cal_replay, scale,
+               n_lanes, cluster, analyze_cost_s, smoke):
+    from repro.learn import ReplayBuffer, TrajectoryHarvester
+    from repro.serve.drift import DriftController, DriftDetector
+    from repro.serve.qos import (DegradationLadder, QoSAdmission,
+                                 TenantRegistry)
+    from repro.serve.service import QueryService
+    from repro.baselines import CboReplanAgent
+
+    db, est = _build_world(scale)
+    pred = _one_shot_predictor(meta, cal_replay, smoke=smoke)
+    adm = QoSAdmission(
+        TenantRegistry(), predictor=pred,
+        ladder=DegradationLadder(rungs=((1.0, None), (1.5, 1)),
+                                 reject_above=2.0))
+    rb = ReplayBuffer(capacity=512, fail_boost=4.0)
+    # w_pred=0 removes the DIRECT predictor-error term from refresh
+    # scores (refits still shift completions, and with them the regret
+    # evidence — in this workload the on_delta-timed decisions come out
+    # identical across the predictor axis). Refit batches stay
+    # SMALL on purpose: weighted-without-replacement sampling only biases
+    # toward the (few, high-priority) post-drift failures when k is well
+    # under the buffer size — sampling the whole buffer would drown the
+    # 45s timeouts in sub-second fast-query targets
+    ctl = DriftController(
+        detector=DriftDetector(w_pred=0.0),
+        policy=_make_policy(kind, analyze_cost_s), replay=rb,
+        predictor=pred if refresh_on else None,
+        refit_threshold=0.5, refit_every=2, refit_samples=24,
+        refit_epochs=8, charge_virtual=True, seed=13)
+    svc = QueryService(db, CboReplanAgent(meta), est=est, n_lanes=n_lanes,
+                       policy="edf", cluster=cluster, admission=adm,
+                       hooks=[TrajectoryHarvester(rb), ctl])
+    t0 = time.perf_counter()
+    comps, stats = svc.run(stream)
+    host = time.perf_counter() - t0
+    return comps, stats, svc, ctl, host
+
+
+def _metrics(comps, stats, svc, ctl, host, stream, n_queries):
+    drift_t = next(a.t for a in stream if a.delta is not None)
+    post = [c for c in comps if c.arrival_t > drift_t]
+    pcts = lambda cs: (
+        float(np.percentile([c.latency for c in cs], 50)) if cs else 0.0,
+        float(np.percentile([c.latency for c in cs], 99)) if cs else 0.0)
+    p50, p99 = pcts(comps)
+    dp50, dp99 = pcts(post)
+    on_time = sum(not c.slo_miss for c in comps)
+    out = {
+        "p50": round(p50, 3), "p99": round(p99, 3),
+        "post_drift_p50": round(dp50, 3), "post_drift_p99": round(dp99, 3),
+        "failed": sum(c.result.failed for c in comps),
+        "slo_miss_rate": stats.slo_miss_rate,
+        "rejected": len(svc.scheduler.rejections),
+        "goodput": round(on_time / n_queries, 4),
+        "reanalyze_events": ctl.stats.refresh_events,
+        "reanalyze_tables": ctl.stats.tables_refreshed,
+        "reanalyze_modeled_s": round(ctl.stats.analyze_modeled_s, 4),
+        "reanalyze_wall_s": round(ctl.stats.analyze_wall_s, 4),
+        "predictor_refits": ctl.stats.refits,
+        "host_seconds": round(host, 2),
+    }
+    return out
+
+
+# ------------------------------------------------------------------- main
+def main(argv=None):
+    args = bench_args(argv, lanes=6)
+    from repro.core.encoding import WorkloadMeta
+    from repro.sql import workloads
+    from repro.sql.cluster import ClusterModel
+
+    scale = 0.06 if args.smoke else 0.2
+    n_queries = 30 if args.smoke else 150
+    drift_at = 10 if args.smoke else 40
+    rate, churn_every = 1.0, 12
+    cluster = ClusterModel(timeout=TIMEOUT)
+
+    wl = workloads.make_workload("job", n_train=48, n_test_per_template=1,
+                                 seed=7)
+    meta = WorkloadMeta.from_workload(wl)
+
+    db0, _ = _build_world(scale)
+    stream = _stream(wl, db0, n_queries=n_queries, rate=rate, seed=17,
+                     drift_at=drift_at, churn_every=churn_every)
+    # deterministic price of the one big refresh (for the budgeted arm):
+    # the post-growth movie_info sampled-scan cost
+    mi = db0.table("movie_info")
+    post_bytes = (1 + GROWTH_X) * mi.bytes()
+    analyze_cost_s = cluster.scan_time(post_bytes * 0.05) + \
+        cluster.stage_overhead
+    n_traps = sum(a.query is not None and
+                  a.query.name.startswith("statstrap") for a in stream)
+    n_deltas = sum(a.delta is not None for a in stream)
+    print(f"== drift control plane: {n_queries} queries ({n_traps} stats-"
+          f"trap), {n_deltas} deltas (movie_info x{GROWTH_X + 1} at query "
+          f"{drift_at}), {args.lanes} lanes, SLO {SLO:.0f}s, timeout "
+          f"{TIMEOUT:.0f}s ==")
+
+    cal_replay = _calibrate_replay(wl, meta, scale=scale,
+                                   n_lanes=args.lanes, cluster=cluster,
+                                   smoke=args.smoke)
+
+    arms = {}
+    comps_by_arm = {}
+    for kind in ("never", "always", "threshold", "budgeted"):
+        for refresh_on in (False, True):
+            name = f"{kind}+{'refresh' if refresh_on else 'oneshot'}"
+            comps, stats, svc, ctl, host = _serve_arm(
+                kind, refresh_on, stream=stream, meta=meta,
+                cal_replay=cal_replay, scale=scale, n_lanes=args.lanes,
+                cluster=cluster, analyze_cost_s=analyze_cost_s,
+                smoke=args.smoke)
+            arms[name] = _metrics(comps, stats, svc, ctl, host, stream,
+                                  n_queries)
+            comps_by_arm[name] = comps
+            m = arms[name]
+            print(f"{name:19s} p99={m['p99']:6.2f}s post-p99="
+                  f"{m['post_drift_p99']:6.2f}s fails={m['failed']:3d} "
+                  f"miss={m['slo_miss_rate']:.2f} rej={m['rejected']:3d} "
+                  f"goodput={m['goodput']:.2f} reANALYZE="
+                  f"{m['reanalyze_tables']:2d}x ({m['reanalyze_modeled_s']:.2f}s) "
+                  f"refits={m['predictor_refits']}")
+
+    # 9th pass: the PR-4 path (no drift control plane at all) — the
+    # "never+oneshot" arm must be completion-bit-identical to it
+    from repro.learn import ReplayBuffer, TrajectoryHarvester
+    from repro.serve.qos import (DegradationLadder, QoSAdmission,
+                                 TenantRegistry)
+    from repro.serve.service import QueryService
+    from repro.baselines import CboReplanAgent
+    db, est = _build_world(scale)
+    pred = _one_shot_predictor(meta, cal_replay, smoke=args.smoke)
+    adm = QoSAdmission(TenantRegistry(), predictor=pred,
+                       ladder=DegradationLadder(rungs=((1.0, None),
+                                                       (1.5, 1)),
+                                                reject_above=2.0))
+    svc = QueryService(db, CboReplanAgent(meta), est=est,
+                       n_lanes=args.lanes, policy="edf", cluster=cluster,
+                       admission=adm,
+                       hooks=[TrajectoryHarvester(ReplayBuffer())])
+    pr4_comps, _ = svc.run(stream)
+    base = comps_by_arm["never+oneshot"]
+    never_identical = (
+        [c.seq for c in base] == [c.seq for c in pr4_comps] and
+        [c.finish_t for c in base] == [c.finish_t for c in pr4_comps] and
+        [c.traj.actions for c in base] ==
+        [c.traj.actions for c in pr4_comps])
+    print(f"never+oneshot == PR-4 path (no control plane): "
+          f"{never_identical}")
+
+    # ------------------------------------------------------------- gates
+    nv, th = arms["never+oneshot"], arms["threshold+oneshot"]
+    al, bg = arms["always+oneshot"], arms["budgeted+oneshot"]
+    ad = arms["never+refresh"]
+    trap_armed = nv["failed"] > 0 and nv["post_drift_p99"] >= TIMEOUT - 1
+    refresh_fixes = (th["failed"] == 0 and al["failed"] == 0 and
+                     th["post_drift_p99"] < nv["post_drift_p99"] / 5)
+    budget_cheaper = (bg["reanalyze_modeled_s"] < al["reanalyze_modeled_s"]
+                      and bg["post_drift_p99"] < nv["post_drift_p99"] / 5)
+    adaptation_helps = (ad["slo_miss_rate"] < nv["slo_miss_rate"] and
+                        ad["failed"] < nv["failed"] and
+                        ad["goodput"] > nv["goodput"])
+    ok = bool(never_identical) if args.smoke else bool(
+        trap_armed and refresh_fixes and budget_cheaper and
+        adaptation_helps and never_identical)
+    print(f"gates: trap_armed={trap_armed} refresh_fixes={refresh_fixes} "
+          f"budget_cheaper={budget_cheaper} "
+          f"adaptation_helps={adaptation_helps} "
+          f"never_identical={never_identical} -> ok={ok}")
+
+    csv_line("drift_never_post_p99_s", 0, nv["post_drift_p99"])
+    csv_line("drift_threshold_post_p99_s", 0, th["post_drift_p99"])
+    csv_line("drift_adapt_miss_rate", 0, f"{ad['slo_miss_rate']:.3f}")
+    csv_line("drift_budget_modeled_s", 0, bg["reanalyze_modeled_s"])
+    emit_bench_json({
+        "smoke": args.smoke, "scale": scale, "n_queries": n_queries,
+        "n_lanes": args.lanes, "rate_qps": rate, "drift_at": drift_at,
+        "growth_x": GROWTH_X, "slo_s": SLO, "timeout_s": TIMEOUT,
+        "trap_every": TRAP_EVERY, "churn_every": churn_every,
+        "analyze_cost_model_s": round(analyze_cost_s, 4),
+        "arms": arms,
+        "never_identical_to_pr4": never_identical,
+        "gates": {"trap_armed": trap_armed,
+                  "refresh_fixes": refresh_fixes,
+                  "budget_cheaper": budget_cheaper,
+                  "adaptation_helps": adaptation_helps,
+                  "ok": ok},
+    }, name="BENCH_drift.json")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if main() else 1)

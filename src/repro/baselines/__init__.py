@@ -1,7 +1,9 @@
 """The paper's three comparison systems, re-implemented against the same
 staged engine: Spark SQL default (+AQE), Lero-style learning-to-rank over
 cardinality-perturbed candidate plans, and AutoSteer-style greedy
-rule-toggle search."""
+rule-toggle search — plus the serving-shaped CBO re-plan policy
+(`CboReplanAgent`) the drift benchmark probes statistics quality with."""
 from repro.baselines.spark_default import run_spark_default
 from repro.baselines.lero import LeroOptimizer
 from repro.baselines.autosteer import AutoSteerOptimizer
+from repro.baselines.cbo_serve import CboReplanAgent

@@ -66,6 +66,25 @@ class PolicyStore:
         # it can only change after a swap/rollback or a delta, so gates in
         # between skip re-probing the incumbent
         self._inc_score: Optional[tuple] = None
+        self.probe_log: List[Dict] = []     # one record per set_probe
+
+    # ------------------------------------------------------------ probe set
+    def set_probe(self, probe: Sequence, *, reason: str = "") -> None:
+        """Swap the held-out probe set (the drift control plane re-samples
+        it to cover drifted templates/tables instead of the fixed list).
+        Invalidates the cached incumbent score: it was measured on the OLD
+        probes and must not gate candidates against the new ones."""
+        self.probe = list(probe)
+        self._inc_score = None
+        self.probe_log.append({"n": len(self.probe), "reason": reason,
+                               "names": [getattr(q, "name", str(q))
+                                         for q in self.probe]})
+
+    def note_stats_refresh(self) -> None:
+        """A catalog re-ANALYZE changed the Estimator the probe rollouts
+        plan with (data versions did NOT move, so the version-keyed cache
+        would wrongly survive): drop the cached incumbent score."""
+        self._inc_score = None
 
     # ---------------------------------------------------------- evaluation
     def probe_score(self, agent, db, est, cluster) -> float:

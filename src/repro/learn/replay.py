@@ -79,8 +79,15 @@ class ReplayBuffer:
 
     def regret(self, exp: Experience) -> float:
         """Relative latency regret vs the best seen for this template."""
-        best = self._best.get(exp.query_name, exp.latency)
-        return (exp.latency - best) / max(best, 1e-9)
+        return self.regret_for(exp.query_name, exp.latency)
+
+    def regret_for(self, query_name: str, latency: float) -> float:
+        """Relative latency regret of one observation vs the best latency
+        seen for its template (0.0 for a never-seen template). The drift
+        detector reads this per completion: sustained regret on a
+        template's tables is execution-level evidence the data moved."""
+        best = self._best.get(query_name, latency)
+        return (latency - best) / max(best, 1e-9)
 
     def priorities(self, current_versions: Dict[str, int]) -> np.ndarray:
         now = self.n_added

@@ -72,6 +72,10 @@ _EXPORTS = {
     "ServiceStats": "repro.serve.service",
     "TenantStats": "repro.serve.service",
     "AdmissionPolicy": "repro.serve.qos",
+    "DriftController": "repro.serve.drift",
+    "DriftDetector": "repro.serve.drift",
+    "RefreshPolicy": "repro.serve.drift",
+    "CoverageProbeSet": "repro.serve.drift",
     "QoSAdmission": "repro.serve.qos",
     "DegradationLadder": "repro.serve.qos",
     "LatencyPredictor": "repro.serve.qos",

@@ -39,6 +39,9 @@ class CacheStats:
                 "invalidations": self.invalidations,
                 "hit_rate": round(self.hit_rate, 4)}
 
+    def reset(self) -> None:
+        self.hits = self.misses = self.evictions = self.invalidations = 0
+
 
 class StageCache:
     """Byte-budgeted LRU over opaque stage entries.
@@ -96,6 +99,13 @@ class StageCache:
     def clear(self) -> None:
         self._entries.clear()
         self.bytes = 0
+
+    def reset_stats(self) -> None:
+        """Zero the counters WITHOUT touching resident entries: the seam
+        that makes consecutive `QueryService` runs sharing one cache
+        independently measurable (counters otherwise accumulate across
+        runs and the second run's hit rate is polluted by the first's)."""
+        self.stats.reset()
 
 
 class PartitionedStageCache(StageCache):
@@ -161,6 +171,11 @@ class PartitionedStageCache(StageCache):
         super().clear()
         for p in self._parts.values():
             p.clear()
+
+    def reset_stats(self) -> None:
+        super().reset_stats()
+        for p in self._parts.values():
+            p.reset_stats()
 
     def stats_by_tenant(self) -> Dict[str, Dict[str, float]]:
         return {t: p.stats.as_dict() for t, p in self.partitions().items()}

@@ -71,6 +71,8 @@ class LatencyPredictor:
         self._cfg = AdamWConfig(lr=lr, weight_decay=0.0, grad_clip=5.0)
         self.n_fit_steps = 0
         self.generation = 0               # bumped per fit(); fences the memo
+        self.n_refits = 0                 # drift-triggered refresh count
+        self.refit_log: List[Dict] = []   # one record per refit_on_drift
         # keyed by the (frozen, value-hashed) Query itself — names are not
         # unique across tenants, but structurally distinct queries must
         # never share a prediction
@@ -173,6 +175,42 @@ class LatencyPredictor:
                         [e.latency for e in exps],
                         batch_size=batch_size, epochs=epochs)
 
+    def refit_on_drift(self, replay, rng: np.random.Generator, *,
+                       current_versions: Optional[Dict] = None,
+                       n_samples: int = 64, batch_size: int = 16,
+                       epochs: int = 2, trigger: str = "") -> float:
+        """Online refresh, replacing one-shot calibration: retrain from the
+        LIVE replay buffer when the drift detector says predictions have
+        diverged from realized latencies. Freshness-prioritized sampling
+        (the versions tags) points the regression at post-delta traffic.
+        Generation-fenced: `fit` bumps `generation` and clears the
+        per-query memo, so every admission decision after the refit sees
+        the new model — never a stale memoized estimate — while decisions
+        already made keep the prediction they were made with."""
+        gen0 = self.generation
+        loss = self.fit_from_replay(replay, rng, n_samples=n_samples,
+                                    batch_size=batch_size, epochs=epochs,
+                                    current_versions=current_versions)
+        if self.generation == gen0:
+            # every sampled experience was state-less (e.g. hook-budget-0
+            # degradations): nothing trainable, no fit ran, the memo is
+            # still valid — skip this refit rather than mis-record it
+            return loss
+        self.n_refits += 1
+        self.refit_log.append({"refit": self.n_refits, "trigger": trigger,
+                               "generation": self.generation,
+                               "loss": round(float(loss), 4)})
+        return loss
+
+    def reset_stats(self) -> None:
+        """Drop the per-query memos (counters stay; the generation is NOT
+        reset — it fences memos and must only move forward). Call between
+        independent serving runs so one run's memoized predictions don't
+        leak into the next run's measurements."""
+        self._pred_memo.clear()
+        self._enc_memo.clear()
+
     def stats(self) -> Dict[str, float]:
         return {"fit_steps": self.n_fit_steps, "generation": self.generation,
+                "refits": self.n_refits,
                 "memo_entries": len(self._pred_memo)}

@@ -193,6 +193,15 @@ class LaneScheduler:
         self.completions: List[Completion] = []
         self.rejections: List[Rejection] = []
         self.delta_log: List[tuple] = []
+        # dynamically scheduled write-barrier tasks (e.g. the drift control
+        # plane's incremental re-ANALYZE): each runs like a delta — only
+        # once every previously admitted query has drained — so every
+        # query decides all its stages against one consistent catalog
+        self._barrier_tasks: deque = deque()
+        # one (barrier END time, label) entry per task run: apply time
+        # plus any virtual charge the task returned — the floor later
+        # admissions see (deltas in delta_log log their APPLY time)
+        self.task_log: List[tuple] = []
         self.ticks = 0
         self.decide_sizes: List[int] = []
         self._write_ts = 0.0          # virtual time of the last delta apply
@@ -204,6 +213,12 @@ class LaneScheduler:
         # `self.agent`'s params or `self.stage` and the change
         # deterministically takes effect from the next tick on.
         self.on_complete: List[Callable[[Completion], None]] = []
+        # opt-in delta hooks: fired right after a delta batch applies (the
+        # lanes are drained — it IS the write barrier), with the apply
+        # time. The drift controller reacts here so a stats refresh lands
+        # at the same barrier with zero extra drain: a task scheduled from
+        # this hook runs before any post-delta query is admitted.
+        self.on_delta: List[Callable[[float, DeltaBatch], None]] = []
         if admission is not None:     # after on_complete: attach hooks it
             admission.attach(self)
 
@@ -234,19 +249,54 @@ class LaneScheduler:
             self.ticks += 1
         return sorted(self.completions, key=lambda c: c.seq)
 
+    def schedule_barrier(self, fn: Callable, label: str = "task") -> None:
+        """Schedule `fn(scheduler, t_apply)` as a write-barrier task: it
+        runs once every previously admitted query has drained, at the
+        virtual time the last of them frees, and every query admitted
+        afterwards starts at or after that time (plus any virtual-seconds
+        charge the task returns). Callable from an `on_complete` hook
+        (the drift controller's trigger point), so the task lands
+        deterministically between policy batches."""
+        self._barrier_tasks.append((label, fn))
+
     # ----------------------------------------------------------- admission
     def _admit(self, pending: deque) -> None:
-        while pending:
+        while True:
+            if self._barrier_tasks:
+                # same drain discipline as a delta arrival: the task may
+                # mutate what in-flight queries depend on (catalog stats,
+                # table data), so it waits for every admitted query
+                if any(l.run is not None for l in self.lanes):
+                    return
+                label, fn = self._barrier_tasks.popleft()
+                t_apply = max([self._write_ts] +
+                              [l.free_at for l in self.lanes])
+                # a task may return a virtual-seconds charge (e.g. a
+                # re-ANALYZE run as a foreground maintenance window):
+                # queries admitted after the barrier start no earlier
+                # than its end
+                dt = fn(self, t_apply)
+                self._write_ts = t_apply + (dt or 0.0)
+                self.task_log.append((self._write_ts, label))
+                continue
+            if not pending:
+                return
             item = pending[0]
             if item.delta is not None:
                 # write barrier: drain every previously admitted query
                 if any(l.run is not None for l in self.lanes):
                     return
                 pending.popleft()
-                t_apply = max([item.t] + [l.free_at for l in self.lanes])
+                # _write_ts participates: a delta right behind a charged
+                # barrier task must not rewind the write floor into the
+                # window the task just charged
+                t_apply = max([item.t, self._write_ts] +
+                              [l.free_at for l in self.lanes])
                 counts = apply_delta(self.db, item.delta)
                 self._write_ts = t_apply
                 self.delta_log.append((t_apply, item.delta, counts))
+                for cb in self.on_delta:
+                    cb(t_apply, item.delta)
                 continue
             if self.policy == "lockstep":
                 if any(l.run is not None for l in self.lanes):

@@ -152,6 +152,22 @@ class QueryService:
         comps = self.scheduler.run(list(stream))
         return comps, self._stats(comps)
 
+    def reset_stats(self, *, clear_entries: bool = False) -> None:
+        """Zero the measurement state that otherwise ACCUMULATES across
+        `run()` calls sharing this service's executor state: stage-cache
+        counters (all partitions) and, when the admission policy carries a
+        `LatencyPredictor`, its per-query prediction memos. With
+        `clear_entries=True` the cache contents are dropped too, so the
+        next run starts cold — on an unmutated database that makes two
+        identical streams produce identical stats end to end."""
+        if self.cache is not None:
+            self.cache.reset_stats()
+            if clear_entries:
+                self.cache.clear()
+        pred = getattr(self.admission, "predictor", None)
+        if pred is not None and hasattr(pred, "reset_stats"):
+            pred.reset_stats()
+
     def run_queries(self, queries: Sequence, *, seeds=None) \
             -> Tuple[List[Completion], ServiceStats]:
         """Closed batch convenience: all queries arrive at t=0."""

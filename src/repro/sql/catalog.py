@@ -49,8 +49,13 @@ class TableStats:
 @dataclasses.dataclass
 class Stats:
     """What the CBO believes. Built by `analyze(db, sample, noise)`; can be
-    built from an old snapshot for the dynamic-evaluation experiments."""
+    built from an old snapshot for the dynamic-evaluation experiments.
+    `versions` records each table's data version AT ANALYZE TIME, so the
+    drift detector can measure catalog lag even for staleness that
+    predates its attachment (None for hand-built snapshots: lag is then
+    baselined at attach)."""
     tables: Dict[str, TableStats]
+    versions: Optional[Dict[str, int]] = None
 
 
 @dataclasses.dataclass
@@ -81,27 +86,40 @@ class Database:
         return self.versions[name]
 
 
+def analyze_table(db: Database, name: str, sample_frac: float = 0.05,
+                  rng: Optional[np.random.Generator] = None) -> TableStats:
+    """ANALYZE one table: sample-based statistics (distinct counts via
+    sample-scale-up — systematically wrong under skew, as in real systems).
+    The incremental unit behind `analyze`; the drift control plane
+    (`serve.drift`) calls it per drifted table instead of re-scanning the
+    whole catalog."""
+    rng = rng if rng is not None else np.random.default_rng(0)
+    t = db.table(name)
+    cols: Dict[str, ColumnStats] = {}
+    n = t.nrows
+    k = max(32, int(n * sample_frac))
+    idx = rng.integers(0, max(n, 1), size=min(k, n)) if n else np.zeros(0, np.int64)
+    for cname, arr in t.columns.items():
+        s = arr[idx] if n else arr
+        d_sample = len(np.unique(s)) if len(s) else 0
+        # first-order jackknife scale-up (biased low under Zipf skew)
+        frac = len(s) / max(n, 1)
+        nd = d_sample / max(frac ** 0.5, 1e-9) if n else 0
+        nd = min(nd, n)
+        cols[cname] = ColumnStats(
+            n_distinct=max(nd, 1.0),
+            min_val=float(arr.min()) if n else 0.0,
+            max_val=float(arr.max()) if n else 0.0)
+    return TableStats(nrows=float(n), columns=cols)
+
+
 def analyze(db: Database, sample_frac: float = 0.05,
             rng: Optional[np.random.Generator] = None) -> Stats:
-    """ANALYZE TABLE: sample-based statistics (distinct counts via
-    sample-scale-up — systematically wrong under skew, as in real systems)."""
-    rng = rng or np.random.default_rng(0)
-    out: Dict[str, TableStats] = {}
-    for name, t in db.tables.items():
-        cols: Dict[str, ColumnStats] = {}
-        n = t.nrows
-        k = max(32, int(n * sample_frac))
-        idx = rng.integers(0, max(n, 1), size=min(k, n)) if n else np.zeros(0, np.int64)
-        for cname, arr in t.columns.items():
-            s = arr[idx] if n else arr
-            d_sample = len(np.unique(s)) if len(s) else 0
-            # first-order jackknife scale-up (biased low under Zipf skew)
-            frac = len(s) / max(n, 1)
-            nd = d_sample / max(frac ** 0.5, 1e-9) if n else 0
-            nd = min(nd, n)
-            cols[cname] = ColumnStats(
-                n_distinct=max(nd, 1.0),
-                min_val=float(arr.min()) if n else 0.0,
-                max_val=float(arr.max()) if n else 0.0)
-        out[name] = TableStats(nrows=float(n), columns=cols)
-    return Stats(tables=out)
+    """ANALYZE TABLE over the whole catalog (one shared rng, so the draw
+    sequence is unchanged from the original single-pass implementation);
+    stamps the data versions the statistics were taken at."""
+    rng = rng if rng is not None else np.random.default_rng(0)
+    return Stats(tables={name: analyze_table(db, name, sample_frac, rng)
+                         for name in db.tables},
+                 versions={name: db.table_version(name)
+                           for name in db.tables})

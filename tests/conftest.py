@@ -25,3 +25,12 @@ def stack_db():
 def estimator(job_db):
     from repro.sql.cbo import Estimator
     return Estimator(job_db, job_db.stats)
+
+
+@pytest.fixture(scope="session")
+def agent(job_workload):
+    """The shared cold serving agent (seed 0) the serving-stack suites
+    (test_serve/test_qos/test_drift) decide with; session-scoped so its
+    jit cache warms once."""
+    from scenarios import make_agent
+    return make_agent(job_workload, seed=0)

@@ -1,0 +1,193 @@
+"""Shared deterministic scenario harness for the serving-stack test suites.
+
+test_serve / test_learn / test_qos / test_drift (and the invariant
+property tests) all exercise the same handful of situations: a fresh
+mutable JOB-like database, sub-second dimension joins around a
+deterministic 300s straggler, delta batches acting as write barriers,
+drifting streams whose traps only fail after a growth delta, and
+multi-tenant SLO traffic. This module is the single home of those
+builders — every one is a pure function of its seed, so scenarios are
+bit-reproducible across test files and runs.
+
+Conventions:
+  * databases are built FRESH per test (`fresh_db`) whenever deltas /
+    re-ANALYZE mutate state — never reuse the session fixture for those;
+  * streams are plain `Arrival` lists: the scheduler copies arrivals per
+    run, so one stream can replay through many schedulers;
+  * the straggler is a triple Zipf fact join whose second join blows the
+    materialize cap -> OOM -> charged the full 300s timeout, next to
+    sub-second dimension joins (the serving benches' staple mix).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.core.agent import AgentConfig, AqoraAgent
+from repro.core.encoding import WorkloadMeta
+from repro.serve.deltas import DeltaBatch
+from repro.serve.scheduler import Arrival
+from repro.sql import datagen
+from repro.sql.query import Filter, JoinCond, Query, Relation
+
+import numpy as np
+
+
+# ------------------------------------------------------------------ worlds
+def fresh_db(scale: float = 0.06, seed: int = 0):
+    """A fresh mutable JOB-like database (delta/re-ANALYZE tests mutate —
+    never hand these the session-scoped fixture)."""
+    return datagen.make_job_like(scale=scale, seed=seed)
+
+
+def make_agent(workload, seed: int = 0, **cfg_kw) -> AqoraAgent:
+    """The standard serving agent over a workload's encoding meta."""
+    return AqoraAgent(WorkloadMeta.from_workload(workload),
+                      AgentConfig(**cfg_kw), seed=seed)
+
+
+def fast_subset(wl) -> List[Query]:
+    """Dimension-join-ish templates: the sub-second traffic every
+    scenario mixes around its stragglers."""
+    return [q for q in wl.train if q.n_relations <= 6] or wl.train
+
+
+# ----------------------------------------------------------------- queries
+def fast_query(i: int) -> Query:
+    """Tiny two-table dimension join, distinct per `i` (distinct cache
+    signatures: flood/working-set scenarios count on that)."""
+    return Query(f"fast{i}",
+                 (Relation("t", "title",
+                           (Filter("production_year", "<=", (1950 + i,)),)),
+                  Relation("kt", "kind_type", ())),
+                 (JoinCond("t", "kind_id", "kt", "id"),))
+
+
+def straggler_query() -> Query:
+    """Triple Zipf fact join: the second join's match count blows past the
+    materialize cap, so the run fails (OOM) and is charged the full 300s
+    timeout — a deterministic straggler next to sub-second joins."""
+    return Query("straggler",
+                 (Relation("ci", "cast_info", ()),
+                  Relation("mi", "movie_info", ()),
+                  Relation("mk", "movie_keyword", ())),
+                 (JoinCond("ci", "movie_id", "mi", "movie_id"),
+                  JoinCond("ci", "movie_id", "mk", "movie_id")))
+
+
+def trap_query(i: int, year: int) -> Query:
+    """Fact-fact-first join (cast_info x movie_info, then a filtered
+    title): the syntactic order is safe pre-drift and OOMs once cast_info
+    grows — the stale-stats trap of the drifting scenarios."""
+    return Query(f"trap_{i}",
+                 (Relation("ci", "cast_info", ()),
+                  Relation("mi", "movie_info", ()),
+                  Relation("t", "title",
+                           (Filter("production_year", "<=", (year,)),))),
+                 (JoinCond("ci", "movie_id", "mi", "movie_id"),
+                  JoinCond("t", "id", "ci", "movie_id")))
+
+
+def mi_join_query(name: str = "q_mi") -> Query:
+    """Three-table join through movie_info: appended movie_info rows join
+    with existing titles, so post-delta stage cardinalities provably
+    change — the invalidation/write-barrier probe query."""
+    return Query(name,
+                 (Relation("t", "title",
+                           (Filter("production_year", "<=", (1990,)),)),
+                  Relation("mi", "movie_info", ()),
+                  Relation("it", "info_type", ())),
+                 (JoinCond("t", "id", "mi", "movie_id"),
+                  JoinCond("mi", "info_type_id", "it", "id")))
+
+
+# ----------------------------------------------------------------- streams
+def straggler_mix_stream(n_fast: int = 6, *, strag_seed: int = 0,
+                         spacing: float = 0.0) -> List[Arrival]:
+    """One straggler at t=0 followed by `n_fast` fast queries: the
+    non-blocking-lanes scenario (async must stream the fast ones through
+    the other lane while the straggler burns its own)."""
+    return [Arrival(0.0, query=straggler_query(), seed=strag_seed)] + \
+        [Arrival(spacing * i, query=fast_query(i), seed=i + 1)
+         for i in range(n_fast)]
+
+
+def barrier_stream(query: Query, table: str = "movie_info", *,
+                   n_append: int = 1500, delta_seed: int = 3,
+                   n_pre: int = 2, n_post: int = 2) -> List[Arrival]:
+    """`n_pre` copies of `query`, one delta on `table`, `n_post` copies:
+    the write-barrier ordering scenario (pre finishes before the apply,
+    post admits after it and sees the appended rows)."""
+    pre = [Arrival(0.0, query=query, seed=i + 1) for i in range(n_pre)]
+    delta = [Arrival(0.1, delta=DeltaBatch(table, n_append=n_append,
+                                           seed=delta_seed))]
+    post = [Arrival(0.2 + 0.1 * i, query=query, seed=n_pre + 2 + i)
+            for i in range(n_post)]
+    return pre + delta + post
+
+
+def drifting_delta_stream(queries: Sequence[Query], *, n_queries: int,
+                          rate: float = 2.0, seed: int = 17,
+                          drift_table: str = "cast_info",
+                          drift_at: int = 8, growth_rows: int = 0,
+                          churn_table: Optional[str] = None,
+                          churn_every: int = 0,
+                          churn_rows: int = 0) -> List[Arrival]:
+    """The drifting scenario: open-loop Poisson arrivals cycling
+    `queries`, one growth delta on `drift_table` after `drift_at`
+    queries, then optional churn deltas on `churn_table` every
+    `churn_every` queries. Deterministic given `seed`."""
+    rng = np.random.default_rng(seed)
+    t, out, since_churn = 0.0, [], 0
+    for i in range(n_queries):
+        t += float(rng.exponential(1.0 / rate))
+        out.append(Arrival(t, query=queries[i % len(queries)],
+                           seed=int(rng.integers(2 ** 31))))
+        if i + 1 == drift_at and growth_rows:
+            out.append(Arrival(t, delta=DeltaBatch(
+                drift_table, n_append=growth_rows, seed=999)))
+        elif i + 1 > drift_at and churn_every and churn_table:
+            since_churn += 1
+            if since_churn >= churn_every:
+                since_churn = 0
+                out.append(Arrival(t, delta=DeltaBatch(
+                    churn_table, n_append=churn_rows, seed=1000 + i)))
+    return out
+
+
+# --------------------------------------------------------------------- QoS
+class FixedPredictor:
+    """Deterministic predictor stub: straggler-shaped queries are slow."""
+
+    def predict_query(self, query):
+        return 300.0 if query.name.startswith("straggler") else 1.0
+
+
+def qos_setup():
+    """The standard two-tenant QoS fixture: a weighted 'gold' tenant with
+    a tight SLO and a rate-limited 'bulk' tenant, admission driven by the
+    FixedPredictor + default degradation ladder."""
+    from repro.serve.qos import (DegradationLadder, QoSAdmission,
+                                 TenantRegistry, TenantSpec)
+    reg = TenantRegistry([
+        TenantSpec("gold", weight=2.0, slo=40.0, cache_bytes=8 << 20),
+        TenantSpec("bulk", weight=1.0, rate=1.5, burst=2, slo=300.0)])
+    adm = QoSAdmission(reg, predictor=FixedPredictor(),
+                       ladder=DegradationLadder())
+    return reg, adm
+
+
+def qos_stream(wl, seed: int = 31) -> List[Arrival]:
+    """Two tenants' merged open-loop traffic with one hopeless monster
+    (a straggler behind gold's tight 40s SLO) swapped in at position 4."""
+    from repro.serve.driver import TenantTraffic, multi_tenant_stream
+    fast = fast_subset(wl)
+    stream = multi_tenant_stream([
+        TenantTraffic("gold", fast[:4], rate=3.0, n_queries=10, slo=40.0,
+                      seed=seed),
+        TenantTraffic("bulk", fast[4:8] or fast, rate=3.0, n_queries=10,
+                      slo=300.0, seed=seed + 1)])
+    for i, a in enumerate(stream):
+        if i == 4:
+            a.query, a.tenant = straggler_query(), "gold"
+            a.deadline = a.t + 40.0
+    return stream

@@ -1,0 +1,179 @@
+"""Property-style invariants over randomized seeded workloads.
+
+Two families, both pure functions of their seeds (so failures replay):
+
+  * the scheduler's virtual clock — whatever the mix of arrivals, lane
+    counts and interleaved deltas, completions respect causality
+    (arrival <= admit <= finish), each lane serializes its queries, and
+    every delta is a STRICT write barrier (everything ahead of it in
+    stream order finishes before it applies; everything behind admits
+    after it and observes the bumped version);
+
+  * `PartitionedStageCache` byte-budget accounting — under random
+    put/get/invalidate/refresh traffic every partition's resident bytes
+    equal the sum of its entries, never exceed its budget, and
+    admitted − evicted == resident; the aggregate counters equal the sum
+    over partitions.
+"""
+import numpy as np
+import pytest
+
+from scenarios import fast_query, fresh_db, make_agent
+
+from repro.serve.cache import PartitionedStageCache
+from repro.serve.deltas import DeltaBatch
+from repro.serve.scheduler import Arrival, LaneScheduler
+from repro.sql.cbo import Estimator
+
+
+# ------------------------------------------------------ virtual clock
+def _random_stream(rng, n_queries: int, n_deltas: int):
+    """Strictly increasing, collision-free arrival times (ties between a
+    query and a delta would make 'ahead of the barrier' ambiguous)."""
+    arrivals = []
+    t = 0.0
+    kinds = ["q"] * n_queries + ["d"] * n_deltas
+    rng.shuffle(kinds)
+    if kinds[0] == "d":                        # lead with a query
+        kinds[kinds.index("q")], kinds[0] = "d", "q"
+    for kind in kinds:
+        t += 0.05 + float(rng.exponential(0.4))
+        if kind == "q":
+            arrivals.append(Arrival(t, query=fast_query(int(rng.integers(6))),
+                                    seed=int(rng.integers(2 ** 31))))
+        else:
+            arrivals.append(Arrival(t, delta=DeltaBatch(
+                "movie_info", n_append=int(rng.integers(100, 800)),
+                seed=int(rng.integers(2 ** 31)))))
+    return arrivals
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_scheduler_virtual_clock_invariants(job_workload, agent, seed):
+    rng = np.random.default_rng(100 + seed)
+    db = fresh_db(scale=0.05, seed=seed)
+    stream = _random_stream(rng, n_queries=10, n_deltas=2)
+    n_lanes = int(rng.integers(1, 5))
+    sched = LaneScheduler(db, Estimator(db, db.stats), agent,
+                          n_lanes=n_lanes, policy="async",
+                          explore=bool(seed % 2))
+    comps = sched.run(stream)
+    queries = [a for a in stream if a.delta is None]
+    deltas = [a for a in stream if a.delta is not None]
+    assert len(comps) == len(queries)
+    assert len(sched.delta_log) == len(deltas)
+
+    # causality per completion
+    by_seq = {}
+    for c in comps:
+        assert c.finish_t > c.admit_t >= c.arrival_t
+        by_seq[c.seq] = c
+    assert [c.seq for c in comps] == sorted(by_seq)   # stream order out
+
+    # monotone per-lane serialization: a lane never admits its next query
+    # before its previous one finished
+    for lane in range(n_lanes):
+        mine = sorted((c for c in comps if c.lane == lane),
+                      key=lambda c: c.admit_t)
+        for prev, nxt in zip(mine, mine[1:]):
+            assert nxt.admit_t >= prev.finish_t
+        assert [c.finish_t for c in mine] == \
+            sorted(c.finish_t for c in mine)
+
+    # deltas are strict write barriers in stream order
+    seq_of = {id(a): i for i, a in enumerate(stream)}
+    for (t_apply, delta, counts), d_arr in zip(sched.delta_log, deltas):
+        assert t_apply >= d_arr.t
+        d_pos = seq_of[id(d_arr)]
+        ahead = [c for c in comps if c.seq < d_pos]
+        behind = [c for c in comps if c.seq > d_pos]
+        assert all(c.finish_t <= t_apply for c in ahead)
+        assert all(c.admit_t >= t_apply for c in behind)
+    # every delta observable: final version == number of deltas applied
+    assert db.table_version("movie_info") == len(deltas)
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_scheduler_policies_agree_on_service_times(job_workload, agent,
+                                                   seed):
+    """Async vs lockstep over the same randomized stream: identical
+    per-query plans and service times; only queueing differs (and the
+    virtual-clock invariants hold for both)."""
+    rng = np.random.default_rng(200 + seed)
+    db = fresh_db(scale=0.05, seed=seed)
+    stream = _random_stream(rng, n_queries=8, n_deltas=1)
+    est = Estimator(db, db.stats)
+
+    def serve(policy):
+        db2 = fresh_db(scale=0.05, seed=seed)
+        sched = LaneScheduler(db2, Estimator(db2, db2.stats), agent,
+                              n_lanes=2, policy=policy)
+        return sched.run(stream)
+
+    a, l = serve("async"), serve("lockstep")
+    for ca, cl in zip(a, l):
+        assert ca.seq == cl.seq
+        assert ca.traj.actions == cl.traj.actions
+        assert ca.result.latency == cl.result.latency
+
+
+# ------------------------------------------------------ cache accounting
+def _check_partition(c):
+    assert c.bytes == sum(nb for _, nb in c._entries.values())
+    assert c.bytes <= c.max_bytes
+    return c.stats
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_partitioned_cache_byte_budget_accounting(seed):
+    rng = np.random.default_rng(300 + seed)
+    budgets = {"a": int(rng.integers(200, 600)),
+               "b": int(rng.integers(50, 200))}
+    cache = PartitionedStageCache(default_bytes=int(rng.integers(100, 400)),
+                                  budgets=budgets)
+    tenants = ["a", "b", "default", "unbudgeted"]
+    for op in range(400):
+        tenant = tenants[int(rng.integers(len(tenants)))]
+        part = cache.partition(tenant)
+        key = "default" if part is cache else tenant
+        r = rng.random()
+        if r < 0.55:                       # put (sometimes a refresh)
+            sig = (key, int(rng.integers(30)))
+            nbytes = int(rng.integers(1, 120))
+            if not part.put(sig, f"e{op}", nbytes):
+                # refusal only ever means "could never fit"
+                assert nbytes > part.max_bytes or \
+                    nbytes > part.max_entry_bytes
+        elif r < 0.9:                      # get
+            part.get((key, int(rng.integers(30))))
+        else:                              # shared O(1) invalidation
+            cache.note_invalidation("movie_info")
+        for p in cache.partitions().values():
+            _check_partition(p)
+
+    # exact admitted − evicted == resident accounting, on a partition fed
+    # only NEW signatures (refreshes of a resident sig are not admissions)
+    c = cache.partition("a")
+    c.clear(), c.stats.reset()
+    n_admit = sum(c.put(("x", i), i, 40) for i in range(50))
+    assert n_admit - c.stats.evictions == len(c)
+    assert c.bytes == 40 * len(c) <= c.max_bytes
+
+    # aggregate counters == sum over partitions (invalidations shared)
+    agg = cache.aggregate_stats()
+    per = cache.stats_by_tenant()
+    for k in ("hits", "misses", "evictions"):
+        assert agg[k] == sum(d[k] for d in per.values())
+    # invalidation is O(1) and SHARED: one counter on the base object, no
+    # per-partition scan/bump
+    assert agg["invalidations"] == cache.stats.invalidations
+    assert per["default"]["invalidations"] == agg["invalidations"]
+    assert per["a"]["invalidations"] == per["b"]["invalidations"] == 0
+
+    # reset_stats: every partition's counters drop, entries survive
+    resident = {t: len(cache.partition(t)) for t in ("a", "b", "default")}
+    cache.reset_stats()
+    for t, d in cache.stats_by_tenant().items():
+        assert d["hits"] == d["misses"] == d["evictions"] == 0
+    assert {t: len(cache.partition(t))
+            for t in ("a", "b", "default")} == resident

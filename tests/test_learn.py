@@ -2,30 +2,25 @@
 curriculum promotion, harvested trajectories == offline rollouts (same
 PPO gradients), bit-reproducible serving with the learner ON, and the
 policy-store gate (corrupted candidate rejected, serving continues on the
-prior version; shadow mode never swaps; rollback restores)."""
+prior version; shadow mode never swaps; rollback restores).
+
+Scenario builders (fresh dbs, seeded agents) live in tests/scenarios.py."""
 import numpy as np
 import pytest
 
 import jax
 
+from scenarios import fresh_db, make_agent
+
 from repro.checkpoint import (agent_state, copy_tree, install_agent_state,
                               params_finite)
-from repro.core.agent import AgentConfig, AqoraAgent
-from repro.core.encoding import WorkloadMeta
 from repro.core.rollout import Trajectory, rollout
 from repro.learn import (AdaptiveCurriculum, Experience, PolicyStore,
                          ReplayBuffer, TrajectoryHarvester, make_online_loop)
 from repro.serve.scheduler import Arrival, LaneScheduler
 from repro.serve.service import QueryService
-from repro.sql import datagen
 from repro.sql.cbo import Estimator
 from repro.sql.cluster import ClusterModel
-
-
-def fresh_db(scale=0.05, seed=0):
-    """Learning tests mutate (deltas) or serve against the db — never
-    reuse the session fixture."""
-    return datagen.make_job_like(scale=scale, seed=seed)
 
 
 def _exp(seq, name, latency, versions, tables=("title",), failed=False):
@@ -143,9 +138,8 @@ def test_harvested_trajectories_match_offline_gradients(job_workload):
     offline agent updated on serial rollouts of the same episodes."""
     db = fresh_db(scale=0.05)
     est = Estimator(db, db.stats)
-    meta = WorkloadMeta.from_workload(job_workload)
-    serve_agent = AqoraAgent(meta, AgentConfig(), seed=11)
-    offline_agent = AqoraAgent(meta, AgentConfig(), seed=11)
+    serve_agent = make_agent(job_workload, seed=11)
+    offline_agent = make_agent(job_workload, seed=11)
 
     qs = job_workload.test[:5]
     seeds = [101, 102, 103, 104, 105]
@@ -180,8 +174,7 @@ def test_online_serving_bit_reproducible_with_learner_on(job_workload,
     def run(tag):
         db = fresh_db(scale=0.05)
         est = Estimator(db, db.stats)
-        meta = WorkloadMeta.from_workload(job_workload)
-        agent = AqoraAgent(meta, AgentConfig(), seed=0)
+        agent = make_agent(job_workload, seed=0)
         store = PolicyStore(tmp_path / f"ps_{tag}", job_workload.test[:2])
         h, l = make_online_loop(
             agent, store=store, update_every=3, sample_size=3,
@@ -225,12 +218,11 @@ def test_gate_rejects_corrupted_candidate_and_serving_continues(
     db = fresh_db(scale=0.05)
     est = Estimator(db, db.stats)
     cluster = ClusterModel()
-    meta = WorkloadMeta.from_workload(job_workload)
-    serving = AqoraAgent(meta, AgentConfig(), seed=0)
+    serving = make_agent(job_workload, seed=0)
     store = PolicyStore(tmp_path / "ps", job_workload.test[:2])
     store.commit(serving, step=0)
 
-    cand = AqoraAgent(meta, AgentConfig(), seed=1)
+    cand = make_agent(job_workload, seed=1)
     install_agent_state(cand, agent_state(serving))
     _nan_corrupt(cand)
     assert not params_finite(cand)
@@ -254,9 +246,8 @@ def test_gate_accepts_equal_candidate_and_shadow_never_swaps(
     db = fresh_db(scale=0.05)
     est = Estimator(db, db.stats)
     cluster = ClusterModel()
-    meta = WorkloadMeta.from_workload(job_workload)
-    serving = AqoraAgent(meta, AgentConfig(), seed=0)
-    cand = AqoraAgent(meta, AgentConfig(), seed=1)
+    serving = make_agent(job_workload, seed=0)
+    cand = make_agent(job_workload, seed=1)
     install_agent_state(cand, agent_state(serving))
 
     shadow = PolicyStore(tmp_path / "shadow", job_workload.test[:2],
@@ -275,8 +266,7 @@ def test_gate_accepts_equal_candidate_and_shadow_never_swaps(
 def test_policy_store_rollback_restores_committed_version(job_workload,
                                                           tmp_path):
     db = fresh_db(scale=0.05)
-    meta = WorkloadMeta.from_workload(job_workload)
-    agent = AqoraAgent(meta, AgentConfig(), seed=0)
+    agent = make_agent(job_workload, seed=0)
     store = PolicyStore(tmp_path / "ps", [])
     store.commit(agent, step=0)
     committed = copy_tree(agent_state(agent))

@@ -2,11 +2,17 @@
 the virtual clock, tenant isolation (a flooding tenant can neither evict
 another tenant's cache entries nor starve its lanes), EDF ordering, the
 degradation ladder / token bucket units, predictor warm-start semantics,
-and the predictor-off fallback being bit-identical to plain async."""
+and the predictor-off fallback being bit-identical to plain async.
+
+Scenario builders (fresh dbs, fast/straggler queries, the two-tenant QoS
+setup + stream, the FixedPredictor stub) live in tests/scenarios.py; the
+`agent` fixture is the session-scoped one from conftest.py.
+"""
 import pytest
 
-from repro.core.agent import AgentConfig, AqoraAgent
-from repro.core.encoding import WorkloadMeta
+from scenarios import (FixedPredictor, fast_query, fast_subset, fresh_db,
+                       qos_setup, qos_stream, straggler_query)
+
 from repro.serve.cache import PartitionedStageCache
 from repro.serve.driver import TenantTraffic, multi_tenant_stream
 from repro.serve.qos import (AdmissionPolicy, DegradationLadder,
@@ -14,47 +20,7 @@ from repro.serve.qos import (AdmissionPolicy, DegradationLadder,
                              TenantSpec, encode_query)
 from repro.serve.scheduler import Arrival, LaneScheduler
 from repro.serve.service import QueryService
-from repro.sql import datagen
 from repro.sql.cbo import Estimator
-from repro.sql.query import Filter, JoinCond, Query, Relation
-
-
-@pytest.fixture(scope="module")
-def agent(job_workload):
-    meta = WorkloadMeta.from_workload(job_workload)
-    return AqoraAgent(meta, AgentConfig(), seed=0)
-
-
-def fresh_db(scale=0.06, seed=0):
-    return datagen.make_job_like(scale=scale, seed=seed)
-
-
-def _fast(wl):
-    return [q for q in wl.train if q.n_relations <= 6] or wl.train
-
-
-def _fast_query(i):
-    return Query(f"fast{i}",
-                 (Relation("t", "title",
-                           (Filter("production_year", "<=", (1950 + i,)),)),
-                  Relation("kt", "kind_type", ())),
-                 (JoinCond("t", "kind_id", "kt", "id"),))
-
-
-# OOMs at the second join -> charged the full 300s timeout
-_STRAGGLER = Query("straggler",
-                   (Relation("ci", "cast_info", ()),
-                    Relation("mi", "movie_info", ()),
-                    Relation("mk", "movie_keyword", ())),
-                   (JoinCond("ci", "movie_id", "mi", "movie_id"),
-                    JoinCond("ci", "movie_id", "mk", "movie_id")))
-
-
-class _FixedPredictor:
-    """Deterministic predictor stub: straggler-shaped queries are slow."""
-
-    def predict_query(self, query):
-        return 300.0 if query.name.startswith("straggler") else 1.0
 
 
 # ------------------------------------------------------------------ units
@@ -128,7 +94,7 @@ def test_predictor_warm_start_matches_critic(job_workload, agent):
 def test_predictor_fit_separates_slow_from_fast(job_workload, agent):
     pred = LatencyPredictor(agent.meta, seed=3, lr=5e-3)
     fast_enc = encode_query(job_workload.test[0], agent.meta)
-    slow_enc = encode_query(_STRAGGLER, agent.meta)
+    slow_enc = encode_query(straggler_query(), agent.meta)
     encs = [fast_enc, slow_enc] * 8
     lats = [1.0, 300.0] * 8
     first = pred.fit(encs, lats, batch_size=8, epochs=1)
@@ -145,29 +111,6 @@ def test_predictor_fit_separates_slow_from_fast(job_workload, agent):
 
 
 # ----------------------------------------------------------- determinism
-def _qos_setup():
-    reg = TenantRegistry([
-        TenantSpec("gold", weight=2.0, slo=40.0, cache_bytes=8 << 20),
-        TenantSpec("bulk", weight=1.0, rate=1.5, burst=2, slo=300.0)])
-    adm = QoSAdmission(reg, predictor=_FixedPredictor(),
-                       ladder=DegradationLadder())
-    return reg, adm
-
-
-def _qos_stream(job_workload, seed=31):
-    fast = _fast(job_workload)
-    stream = multi_tenant_stream([
-        TenantTraffic("gold", fast[:4], rate=3.0, n_queries=10, slo=40.0,
-                      seed=seed),
-        TenantTraffic("bulk", fast[4:8] or fast, rate=3.0, n_queries=10,
-                      slo=300.0, seed=seed + 1)])
-    for i, a in enumerate(stream):              # one hopeless monster
-        if i == 4:
-            a.query, a.tenant = _STRAGGLER, "gold"
-            a.deadline = a.t + 40.0             # gold's tight SLO
-    return stream
-
-
 def test_qos_same_seed_identical_admissions(job_workload, agent):
     """Same seed => identical admissions, degradations, rejections and
     completion times on the virtual clock, including token-bucket
@@ -175,11 +118,11 @@ def test_qos_same_seed_identical_admissions(job_workload, agent):
     runs = []
     for _ in range(2):
         db = fresh_db()
-        reg, adm = _qos_setup()
+        reg, adm = qos_setup()
         svc = QueryService(db, agent, est=Estimator(db, db.stats),
                            n_lanes=2, policy="edf", tenants=reg,
                            admission=adm)
-        comps, stats = svc.run(_qos_stream(job_workload))
+        comps, stats = svc.run(qos_stream(job_workload))
         d = stats.as_dict()
         d.pop("hook_seconds")           # host wall time: not virtual-clock
         runs.append((
@@ -198,20 +141,20 @@ def test_qos_admission_reusable_across_runs(job_workload, agent):
     inherit the first run's token-bucket end time (prepare resets the
     virtual-clock-relative state)."""
     db = fresh_db()
-    reg, adm = _qos_setup()
+    reg, adm = qos_setup()
     svc = QueryService(db, agent, est=Estimator(db, db.stats), n_lanes=2,
                        policy="edf", tenants=reg, admission=adm)
     rows = []
     for _ in range(2):
-        comps, _ = svc.run(_qos_stream(job_workload))
+        comps, _ = svc.run(qos_stream(job_workload))
         rows.append([(c.seq, c.admit_t, c.hook_budget) for c in comps])
     assert rows[0] == rows[1]
 
 
 # ------------------------------------------------------------- isolation
 def test_flood_cannot_evict_other_tenants_cache(job_workload, agent):
-    victims = [_fast_query(i) for i in range(3)]
-    floods = [_fast_query(100 + i) for i in range(24)]
+    victims = [fast_query(i) for i in range(3)]
+    floods = [fast_query(100 + i) for i in range(24)]
 
     # solo pass: learn the victim's working-set signatures
     db = fresh_db()
@@ -242,22 +185,26 @@ def test_flood_cannot_evict_other_tenants_cache(job_workload, agent):
     by_tenant = svc.cache.stats_by_tenant()
     assert agg["evictions"] == sum(d["evictions"]
                                    for d in by_tenant.values())
+    # reset_stats reaches every partition (counters only: entries stay)
+    svc.reset_stats()
+    assert all(d["hits"] == 0 and d["misses"] == 0 and d["evictions"] == 0
+               for d in svc.cache.stats_by_tenant().values())
+    assert all(s in parts["victim"] for s in sigs)
 
 
 def test_partition_invalidation_is_shared(job_workload, agent):
     """One delta fences EVERY tenant's stale entries (shared version tags):
     post-delta executions are correct in all partitions."""
     from repro.serve.deltas import DeltaBatch, apply_delta
-    from repro.sql.executor import run_adaptive
+    from repro.sql.executor import AdaptiveRun, run_adaptive
     from repro.sql.plans import syntactic_plan
     db = fresh_db()
     est = Estimator(db, db.stats)
     cache = PartitionedStageCache(default_bytes=32 << 20)
     db._stage_cache = cache
-    q = _fast_query(1)
+    q = fast_query(1)
     rows = {}
     for tenant in ("a", "b"):
-        from repro.sql.executor import AdaptiveRun
         run = AdaptiveRun(db, q, syntactic_plan(q), est, max_hook_steps=0,
                           cache=cache.partition(tenant))
         assert run.start() is None
@@ -267,7 +214,6 @@ def test_partition_invalidation_is_shared(job_workload, agent):
     assert cache.stats.invalidations == 1      # one shared O(1) counter
     ref = run_adaptive(db, q, syntactic_plan(q), est, reuse_stages=False)
     for tenant in ("a", "b"):
-        from repro.sql.executor import AdaptiveRun
         run = AdaptiveRun(db, q, syntactic_plan(q), est, max_hook_steps=0,
                           cache=cache.partition(tenant))
         assert run.start() is None
@@ -280,7 +226,7 @@ def test_rate_limited_flood_cannot_starve_other_lanes(job_workload, agent):
     """A tenant flooding at t=0 occupies the lane FCFS; with QoS its token
     bucket spaces it out and fair-share tie-breaks favor the underserved
     tenant, so the other tenant's queries stop queueing behind the burst."""
-    fast = _fast(job_workload)
+    fast = fast_subset(job_workload)
 
     def build_stream():
         s = [Arrival(0.0, query=fast[i % 4], seed=i, tenant="flood")
@@ -318,20 +264,20 @@ def test_qos_off_bit_identical_to_plain_async(job_workload, agent):
         db = fresh_db()
         svc = QueryService(db, agent, est=Estimator(db, db.stats),
                            n_lanes=3, policy="async", **kw)
-        comps, _ = svc.run(_qos_stream(job_workload))
+        comps, _ = svc.run(qos_stream(job_workload))
         return comps
 
     plain = serve()
-    reg, _ = _qos_setup()
+    reg, _ = qos_setup()
     off = serve(tenants=reg)
     passthrough = serve(admission=AdmissionPolicy())
 
     # arrivals are copied per run: a stream that already went through a
     # QoS scheduler (deferral floors, stamped deadlines) must replay
     # through plain async untouched
-    shared = _qos_stream(job_workload)
+    shared = qos_stream(job_workload)
     db = fresh_db()
-    reg2, adm2 = _qos_setup()
+    reg2, adm2 = qos_setup()
     QueryService(db, agent, est=Estimator(db, db.stats), n_lanes=3,
                  policy="edf", tenants=reg2, admission=adm2).run(shared)
     assert all(a.not_before == 0.0 for a in shared)
@@ -351,7 +297,7 @@ def test_qos_off_bit_identical_to_plain_async(job_workload, agent):
 
 # -------------------------------------------------------------- scheduling
 def test_edf_reorders_by_deadline(job_workload, agent):
-    fast = _fast(job_workload)
+    fast = fast_subset(job_workload)
 
     def build_stream():
         return [Arrival(0.0, query=fast[i], seed=i, deadline=dl)
@@ -373,23 +319,25 @@ def test_degraded_budget_caps_hook_steps(job_workload, agent):
     decisions: budget 1 -> at most one action, budget 0 -> none (the
     pure syntactic/AQE plan runs)."""
     reg = TenantRegistry([TenantSpec("t", slo=200.0)])   # severity 1.5
-    adm = QoSAdmission(reg, predictor=_FixedPredictor(),
+    adm = QoSAdmission(reg, predictor=FixedPredictor(),
                        ladder=DegradationLadder())
     db = fresh_db()
     sched = LaneScheduler(db, Estimator(db, db.stats), agent, n_lanes=1,
                           policy="edf", admission=adm)
-    comps = sched.run([Arrival(0.0, query=_STRAGGLER, seed=0, tenant="t")])
+    comps = sched.run([Arrival(0.0, query=straggler_query(), seed=0,
+                               tenant="t")])
     assert len(comps) == 1
     c = comps[0]
     assert c.degraded and c.hook_budget == 1
     assert len(c.traj.actions) <= 1
     # severity 2.5 -> budget 0: no hook decisions at all
     reg0 = TenantRegistry([TenantSpec("t", slo=120.0)])
-    adm0 = QoSAdmission(reg0, predictor=_FixedPredictor(),
+    adm0 = QoSAdmission(reg0, predictor=FixedPredictor(),
                         ladder=DegradationLadder())
     db = fresh_db()
     sched = LaneScheduler(db, Estimator(db, db.stats), agent, n_lanes=1,
                           policy="edf", admission=adm0)
-    comps = sched.run([Arrival(0.0, query=_STRAGGLER, seed=0, tenant="t")])
+    comps = sched.run([Arrival(0.0, query=straggler_query(), seed=0,
+                               tenant="t")])
     assert comps[0].hook_budget == 0
     assert comps[0].traj.actions == []

@@ -2,53 +2,26 @@
 O(1) version-tag invalidation, bit-for-bit equality with cache-off runs),
 async lane scheduling (seeded async == seeded serial; stragglers do not
 block other lanes; lockstep remains a reproducible special case), the
-delta write barrier, and the service façade's metrics."""
-import numpy as np
-import pytest
+delta write barrier, and the service façade's metrics.
 
-from repro.core.agent import AgentConfig, AqoraAgent
-from repro.core.encoding import WorkloadMeta
+Shared scenario builders (fresh dbs, fast/straggler/mi-join queries,
+barrier streams) live in tests/scenarios.py; the `agent` fixture is the
+session-scoped one from conftest.py.
+"""
+import numpy as np
+
+from scenarios import (barrier_stream, fast_query, fresh_db, mi_join_query,
+                       straggler_mix_stream, straggler_query)
+
 from repro.core.rollout import rollout
 from repro.serve.cache import StageCache
 from repro.serve.deltas import DeltaBatch, apply_delta
 from repro.serve.driver import open_loop_stream
 from repro.serve.scheduler import Arrival, LaneScheduler
 from repro.serve.service import QueryService
-from repro.sql import datagen
 from repro.sql.cbo import Estimator
 from repro.sql.executor import Executor, run_adaptive
 from repro.sql.plans import syntactic_plan
-from repro.sql.query import Filter, JoinCond, Query, Relation
-
-
-@pytest.fixture(scope="module")
-def agent(job_workload):
-    meta = WorkloadMeta.from_workload(job_workload)
-    return AqoraAgent(meta, AgentConfig(), seed=0)
-
-
-def fresh_db(scale=0.1, seed=0):
-    """Delta tests MUTATE the database — never reuse the session fixture."""
-    return datagen.make_job_like(scale=scale, seed=seed)
-
-
-def _fast_query(i):
-    return Query(f"fast{i}",
-                 (Relation("t", "title",
-                           (Filter("production_year", "<=", (1950 + i,)),)),
-                  Relation("kt", "kind_type", ())),
-                 (JoinCond("t", "kind_id", "kt", "id"),))
-
-
-# triple Zipf fact join: the second join's match count blows past the
-# materialize cap, so the run fails (OOM) and is charged the full timeout —
-# a deterministic 300s straggler next to sub-second dimension joins
-_STRAGGLER = Query("straggler",
-                   (Relation("ci", "cast_info", ()),
-                    Relation("mi", "movie_info", ()),
-                    Relation("mk", "movie_keyword", ())),
-                   (JoinCond("ci", "movie_id", "mi", "movie_id"),
-                    JoinCond("ci", "movie_id", "mk", "movie_id")))
 
 
 # ------------------------------------------------------------- stage cache
@@ -103,6 +76,19 @@ def test_stage_cache_eviction_counter_consistency():
     assert admitted - c.stats.evictions == len(c)
 
 
+def test_stage_cache_reset_stats_keeps_entries():
+    """reset_stats zeroes the counters without touching residency — the
+    between-runs measurement seam."""
+    c = StageCache(max_bytes=100, max_entry_bytes=100)
+    c.put(("a",), "x", 30)
+    assert c.get(("a",)) == "x" and c.get(("b",)) is None
+    assert c.stats.hits == 1 and c.stats.misses == 1
+    c.reset_stats()
+    assert c.stats.as_dict() == {"hits": 0, "misses": 0, "evictions": 0,
+                                 "invalidations": 0, "hit_rate": 0.0}
+    assert len(c) == 1 and c.get(("a",)) == "x"   # entries survived
+
+
 def test_executor_exposes_cache_stats_and_hits(job_workload):
     db = fresh_db(scale=0.05)
     est = Estimator(db, db.stats)
@@ -135,13 +121,7 @@ def test_executor_eviction_under_tiny_budget(job_workload):
 def test_invalidation_recomputes_bit_for_bit_vs_cache_off():
     db = fresh_db(scale=0.08)
     est = Estimator(db, db.stats)
-    q = Query("q_mi",
-              (Relation("t", "title",
-                        (Filter("production_year", "<=", (1990,)),)),
-               Relation("mi", "movie_info", ()),
-               Relation("it", "info_type", ())),
-              (JoinCond("t", "id", "mi", "movie_id"),
-               JoinCond("mi", "info_type_id", "it", "id")))
+    q = mi_join_query()
     r1 = run_adaptive(db, q, syntactic_plan(q), est)
     r2 = run_adaptive(db, q, syntactic_plan(q), est)       # warm: cache hit
     assert [s.out_rows for s in r2.stages] == [s.out_rows for s in r1.stages]
@@ -213,18 +193,17 @@ def test_scheduler_window_does_not_change_results(job_db, job_workload,
 def test_straggler_does_not_block_other_lanes(job_workload, agent):
     db = fresh_db(scale=0.1)
     est = Estimator(db, db.stats)
-    fast = [_fast_query(i) for i in range(6)]
+    strag_q = straggler_query()
     # precondition: the straggler really dominates (OOM -> timeout charge)
-    r_strag = run_adaptive(db, _STRAGGLER, syntactic_plan(_STRAGGLER), est)
-    r_fast = run_adaptive(db, fast[0], syntactic_plan(fast[0]), est)
+    r_strag = run_adaptive(db, strag_q, syntactic_plan(strag_q), est)
+    fast0 = fast_query(0)
+    r_fast = run_adaptive(db, fast0, syntactic_plan(fast0), est)
     assert r_strag.latency > 10 * r_fast.latency
 
     def serve(policy):
         sched = LaneScheduler(db, est, agent, n_lanes=2, explore=False,
                               policy=policy, window=0.0)
-        stream = [Arrival(0.0, query=_STRAGGLER, seed=0)] + \
-            [Arrival(0.0, query=q, seed=i + 1) for i, q in enumerate(fast)]
-        return sched.run(stream)
+        return sched.run(straggler_mix_stream(6))
 
     a = serve("async")
     strag = a[0]
@@ -268,17 +247,7 @@ def test_lockstep_policy_matches_rollout_batch(job_db, job_workload,
 def test_delta_write_barrier_orders_queries(job_workload, agent):
     db = fresh_db(scale=0.08)
     est = Estimator(db, db.stats)
-    q = Query("q_mi_barrier",
-              (Relation("t", "title",
-                        (Filter("production_year", "<=", (1990,)),)),
-               Relation("mi", "movie_info", ()),
-               Relation("it", "info_type", ())),
-              (JoinCond("t", "id", "mi", "movie_id"),
-               JoinCond("mi", "info_type_id", "it", "id")))
-    stream = [Arrival(0.0, query=q, seed=1), Arrival(0.0, query=q, seed=2),
-              Arrival(0.1, delta=DeltaBatch("movie_info", n_append=1500,
-                                            seed=3)),
-              Arrival(0.2, query=q, seed=4), Arrival(0.3, query=q, seed=5)]
+    stream = barrier_stream(mi_join_query("q_mi_barrier"))
     sched = LaneScheduler(db, est, agent, n_lanes=2, explore=False,
                           policy="async")
     comps = sched.run(stream)
@@ -331,3 +300,30 @@ def test_query_service_stats_and_driver(job_workload, agent):
     for a, b in zip(comps, comps2):
         assert a.result.latency == b.result.latency
         assert a.traj.actions == b.traj.actions
+
+
+def test_query_service_reset_stats_between_runs(job_workload, agent):
+    """Consecutive runs on one service ACCUMULATE cache counters (the
+    executor state is shared); reset_stats(clear_entries=True) makes the
+    second run's stats independently measurable — and identical to the
+    first run's on an unmutated database."""
+    db = fresh_db(scale=0.05)
+    svc = QueryService(db, agent, est=Estimator(db, db.stats), n_lanes=2)
+    stream = open_loop_stream(job_workload.test[:4], rate=4.0,
+                              n_queries=6, seed=9)
+    _, s1 = svc.run(stream)
+    _, s2 = svc.run(stream)           # warm cache + counters carry over
+    assert s2.cache["hits"] > s1.cache["hits"]
+    svc.reset_stats(clear_entries=True)
+    assert len(svc.cache) == 0
+    _, s3 = svc.run(stream)           # cold again: full independent rerun
+    d1, d3 = s1.as_dict(), s3.as_dict()
+    d1.pop("hook_seconds"), d3.pop("hook_seconds")   # host wall time
+    assert d3 == d1
+    # counters-only reset keeps entries resident: same completions, all
+    # prior misses now hit
+    svc.reset_stats()
+    assert len(svc.cache) > 0
+    _, s4 = svc.run(stream)
+    assert s4.cache["misses"] == 0 and s4.cache["hits"] > 0
+    assert s4.n_completed == s1.n_completed
