@@ -1,0 +1,428 @@
+"""Failure-recovery benchmark: one seeded chaos storm replayed through
+four recovery variants — feeds results/BENCH_faults.json.
+
+The world is bench_drift's stale-stats serving setup (JOB-like db with
+a young movie_info, catalog ANALYZEd at build; one growth delta
+multiplies movie_info x25 mid-stream) plus a seeded `FaultInjector`
+storm: per-stage transient errors and lane crashes, per-attempt
+straggler slowdowns (x8-48), and stats-corruption events at admission.
+Every "stats-trap" query admitted after the growth delta
+deterministically OOMs under the stale catalog (the stale-CBO re-plan
+puts the fact-fact join first and it blows the materialize cap), while
+the title-filtered order completes — the failure the retry ladder's
+fallback replan is built to exploit. OOMs are priced at DETECTION time
+plus a spill penalty (`ClusterModel(oom_charge="detect")`) so the
+comparison measures recovery, not timeout bookkeeping.
+
+The SAME stream and the SAME chaos schedule (the injector is a pure
+function of its seed — decisions are keyed by (seq, attempt, stage),
+never by arrival order or lane count) run through four arms:
+
+  none     faults fire, nothing recovers: any injected stage fault or
+           trap OOM is a failed query (the PR-5 stack under chaos);
+  blind    restart-only retries (resume and fallback disabled): what a
+           bare retry loop buys — transients are re-rolled, but the
+           deterministic trap OOM restarts into the SAME OOM;
+  resume   the full retry ladder: stage-resume for transients (pay only
+           the failed stage onwards), fallback replan for OOMs
+           (broadcast hints stripped, the blown join pair banned,
+           leaves re-folded smallest-first by actual bytes);
+  full     resume + hedged stragglers: a lane whose elapsed exceeds
+           `factor x` the calibrated `LatencyPredictor` estimate gets a
+           speculative re-run on an idle lane; first finisher wins, the
+           loser is cancelled at the winner's finish.
+
+Per arm: p50/p99 latency, goodput (on-time successes / queries),
+failure counts broken down by kind, and the recovery plane's own
+counters (retries by mode, hedges, backoff seconds). Gates: the full
+stack strictly beats `none` AND `blind` on both goodput and p99.
+
+A separate scripted scenario exercises the post-swap circuit breaker
+causally: an incumbent policy whose head is pinned to cbo-replan (traps
+re-planned on fresh stats, sub-second) is hot-swapped for a candidate
+pinned to noop (traps OOM); the breaker detects the post-swap failure
+spike from live completions, rolls the store back to the incumbent's
+exact params, and the traps recover. The same scripted outage runs with
+and without the breaker: without, every post-swap trap fails to stream
+end; with, the outage is bounded at the trip and the trailing stream is
+clean.
+
+  PYTHONPATH=src python -m benchmarks.bench_faults [--smoke]
+"""
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_args, csv_line, emit_bench_json
+
+SLO = 30.0                     # per-query deadline (virtual seconds)
+TIMEOUT = 60.0                 # shortened so failures complete mid-stream
+SPILL_S = 10.0                 # OOM detect pricing: spill/cleanup charge
+GROWTH_X = 24                  # movie_info appends 24x its rows at drift
+SHRINK_SEED = 7                # the young-movie_info world build
+TRAP_EVERY = 5
+CHAOS_SEED = 23
+P_CRASH, P_TRANSIENT = 0.01, 0.03     # per stage charge
+P_SLOW, P_CORRUPT = 0.06, 0.03        # per attempt / per admission
+SLOW_FACTOR = (8.0, 48.0)             # straggler slowdown range
+HEDGE_FACTOR = 4.0
+
+# the scripted breaker demo pins ITS world small: at scale 0.06 with
+# cast_info grown by 120k rows, (ci x mi) is ~6M rows (blows a 400k cap)
+# while the title<=1900-first order's final output is ~31k rows
+DEMO_SCALE, DEMO_GROWTH_ROWS, DEMO_CAP = 0.06, 120_000, 400_000
+
+
+# ------------------------------------------------------------------ world
+def _build_world(scale):
+    """bench_drift's world: movie_info shrunk young, statistics taken
+    THEN — the catalog is in sync at serve start and goes stale the moment
+    the mid-stream growth delta lands, arming the trap queries."""
+    from repro.serve.deltas import DeltaBatch, apply_delta
+    from repro.sql import datagen
+    from repro.sql.catalog import analyze
+    from repro.sql.cbo import Estimator
+
+    db = datagen.make_job_like(scale=scale, seed=0)
+    apply_delta(db, DeltaBatch("movie_info", delete_frac=0.9,
+                               seed=SHRINK_SEED))
+    db.stats = analyze(db, rng=np.random.default_rng(0))
+    return db, Estimator(db, db.stats)
+
+
+def _trap(i: int, year: int):
+    """Fact-fact first syntactically — and by stale-stats CBO choice once
+    movie_info has grown (the stale catalog keeps saying it is small).
+    The title-filtered order's intermediates stay within the cap."""
+    from repro.sql.query import Filter, JoinCond, Query, Relation
+    return Query(f"statstrap_{i}",
+                 (Relation("ci", "cast_info", ()),
+                  Relation("mi", "movie_info", ()),
+                  Relation("t", "title",
+                           (Filter("production_year", "<=", (year,)),))),
+                 (JoinCond("ci", "movie_id", "mi", "movie_id"),
+                  JoinCond("t", "id", "ci", "movie_id")))
+
+
+def _stream(wl, db, *, n_queries, rate, seed, drift_at):
+    from repro.serve.deltas import DeltaBatch
+    from repro.serve.scheduler import Arrival
+    from benchmarks.bench_serve import fast_subset
+
+    rng = np.random.default_rng(seed)
+    fast = fast_subset(wl)[:10]
+    traps = [_trap(i, 1940 + 5 * i) for i in range(5)]
+    mi_rows = db.table("movie_info").nrows      # post-shrink
+    t, out = 0.0, []
+    for i in range(n_queries):
+        t += float(rng.exponential(1.0 / rate))
+        q = traps[(i // TRAP_EVERY) % len(traps)] if i % TRAP_EVERY == 0 \
+            else fast[i % len(fast)]
+        out.append(Arrival(t, query=q, seed=int(rng.integers(2 ** 31)),
+                           deadline=t + SLO))
+        if i + 1 == drift_at:
+            out.append(Arrival(t, delta=DeltaBatch(
+                "movie_info", n_append=GROWTH_X * mi_rows, seed=999)))
+    return out
+
+
+def _cluster(cap=None):
+    from repro.sql.cluster import ClusterModel
+    kw = {"materialize_cap": cap} if cap else {}
+    return ClusterModel(timeout=TIMEOUT, oom_charge="detect",
+                        oom_spill_penalty=SPILL_S, **kw)
+
+
+# ------------------------------------------------------------- calibration
+def _hedge_predictor(meta, stream, *, scale, cap, n_lanes, smoke):
+    """Clean (fault-free) pass over the same stream, harvested into a
+    replay buffer and fit one-shot: the `LatencyPredictor` the full arm's
+    hedge policy compares elapsed time against."""
+    from repro.baselines import CboReplanAgent
+    from repro.learn import ReplayBuffer, TrajectoryHarvester
+    from repro.serve.qos import LatencyPredictor
+    from repro.serve.service import QueryService
+
+    db, est = _build_world(scale)
+    rb = ReplayBuffer(capacity=256)
+    QueryService(db, CboReplanAgent(meta, max_steps=3), est=est,
+                 n_lanes=n_lanes, cluster=_cluster(cap=cap),
+                 hooks=[TrajectoryHarvester(rb)]).run(stream)
+    pred = LatencyPredictor(meta, seed=5, lr=5e-3)
+    rng = np.random.default_rng(7)
+    for _ in range(4 if smoke else 10):
+        pred.fit_from_replay(rb, rng, n_samples=48, batch_size=16,
+                             epochs=3)
+    return pred
+
+
+# ------------------------------------------------------------------- arms
+def _recovery(arm, predictor):
+    from repro.serve.recover import (FaultInjector, HedgePolicy,
+                                     RecoveryManager, RetryPolicy)
+    injector = FaultInjector(
+        seed=CHAOS_SEED, p_crash=P_CRASH, p_transient=P_TRANSIENT,
+        p_slow=P_SLOW, p_corrupt=P_CORRUPT, slow_factor=SLOW_FACTOR)
+    if arm == "none":
+        return RecoveryManager(injector=injector)
+    if arm == "blind":
+        retry = RetryPolicy(max_attempts=3, backoff=0.5, resume=False,
+                            fallback=False)
+        return RecoveryManager(injector=injector, retry=retry)
+    retry = RetryPolicy(max_attempts=3, backoff=0.5)
+    if arm == "resume":
+        return RecoveryManager(injector=injector, retry=retry)
+    assert arm == "full", arm
+    hedge = HedgePolicy(factor=HEDGE_FACTOR, predictor=predictor)
+    return RecoveryManager(injector=injector, retry=retry, hedge=hedge)
+
+
+def _serve_arm(arm, *, stream, meta, predictor, scale, cap, n_lanes):
+    from repro.baselines import CboReplanAgent
+    from repro.serve.service import QueryService
+
+    db, est = _build_world(scale)
+    mgr = _recovery(arm, predictor)
+    svc = QueryService(db, CboReplanAgent(meta, max_steps=3), est=est,
+                       n_lanes=n_lanes, cluster=_cluster(cap=cap),
+                       recovery=mgr)
+    t0 = time.perf_counter()
+    comps, stats = svc.run(stream)
+    host = time.perf_counter() - t0
+    return comps, stats, mgr, host
+
+
+def _metrics(comps, stats, mgr, host, n_queries):
+    lats = [c.latency for c in comps]
+    on_time = sum((not c.result.failed) and not c.slo_miss for c in comps)
+    rs = mgr.stats.as_dict()
+    return {
+        "p50": round(float(np.percentile(lats, 50)), 3),
+        "p99": round(float(np.percentile(lats, 99)), 3),
+        "failed": int(stats.n_failed),
+        "failure_kinds": stats.failure_kinds or {},
+        "goodput": round(on_time / n_queries, 4),
+        "slo_miss_rate": stats.slo_miss_rate,
+        "attempts_total": stats.attempts_total,
+        "n_retried": stats.n_retried,
+        "n_recovered": stats.n_recovered,
+        "n_hedged": stats.n_hedged,
+        "recovery": {k: rs[k] for k in
+                     ("n_failures", "n_retries", "n_resumed", "n_replanned",
+                      "n_restarted", "n_given_up", "n_hedges",
+                      "n_hedge_wins", "n_hedge_cancelled", "corruptions",
+                      "backoff_s", "by_kind")},
+        "host_seconds": round(host, 2),
+    }
+
+
+# ---------------------------------------------------------- breaker demo
+def _force_head_action(agent, idx: int):
+    """Pin the actor head to one action: zero the output weights and put
+    a one-hot spike on its bias — argmax (explore=False serving) then
+    picks `idx` wherever it is legal."""
+    import jax.numpy as jnp
+    head = dict(agent.actor["head"])
+    head["w2"] = jnp.zeros_like(head["w2"])
+    b2 = np.zeros(head["b2"].shape, np.float32)
+    b2[idx] = 50.0
+    head["b2"] = jnp.asarray(b2)
+    agent.actor = {**agent.actor, "head": head}
+
+
+def _breaker_serve(meta, wl, *, n_lanes, with_breaker):
+    """One scripted bad-swap serve: incumbent pinned to cbo-replan (traps
+    re-planned on fresh stats, sub-second), hot-swapped mid-stream for a
+    candidate pinned to noop (traps run syntactically and OOM)."""
+    from repro.core.agent import AgentConfig, AqoraAgent
+    from repro.learn.policy_store import PolicyStore
+    from repro.serve.deltas import DeltaBatch, apply_delta
+    from repro.serve.recover import PolicyBreaker, RecoveryManager
+    from repro.serve.scheduler import Arrival, LaneScheduler
+    from repro.sql import datagen
+    from repro.sql.catalog import analyze
+    from repro.sql.cbo import Estimator
+    from benchmarks.bench_serve import fast_subset
+
+    db = datagen.make_job_like(scale=DEMO_SCALE, seed=0)
+    apply_delta(db, DeltaBatch("cast_info", n_append=DEMO_GROWTH_ROWS,
+                               seed=999))
+    db.stats = analyze(db, rng=np.random.default_rng(0))
+    est = Estimator(db, db.stats)
+
+    agent = AqoraAgent(meta, AgentConfig(max_steps=1), seed=0)
+    _force_head_action(agent, 0)                 # action 0 == cbo(1)
+    store = PolicyStore(tempfile.mkdtemp(prefix="bench_faults_ps_"),
+                        probe=[], mode="gate")
+    store.commit(agent, 1)
+
+    brk = PolicyBreaker(store, agent, window=12, min_post=5,
+                        fail_margin=0.15, cooldown=10) if with_breaker \
+        else None
+    sched = LaneScheduler(db, est, agent, n_lanes=n_lanes,
+                          cluster=_cluster(cap=DEMO_CAP),
+                          recovery=RecoveryManager(breaker=brk)
+                          if with_breaker else None)
+
+    # host-cheap either way (sub-second queries at the demo scale): a
+    # fixed-length stream keeps the trip comfortably clear of the
+    # trailing-third healing window in smoke mode too
+    n = 48
+    swap_at = n // 3
+    traps = [_trap(i, 1896 + i) for i in range(5)]
+    fast = fast_subset(wl)[:6]
+    rng = np.random.default_rng(41)
+    t, stream = 0.0, []
+    for i in range(n):
+        t += float(rng.exponential(0.5))
+        q = traps[(i // 2) % 5] if i % 2 == 0 else fast[i % 6]
+        stream.append(Arrival(t, query=q, seed=int(rng.integers(2 ** 31))))
+
+    def swapper(comp):
+        if comp.seq == swap_at - 1 and store.serving_step == 1:
+            _force_head_action(agent, agent.space.noop_idx)
+            store.commit(agent, 2)
+    sched.on_complete.insert(0, swapper)
+    return sched.run(stream), brk, store, n, swap_at
+
+
+def _breaker_demo(meta, wl, *, n_lanes):
+    """Post-swap regression, detected and rolled back from live traffic.
+
+    No injected faults: every post-swap failure is CAUSED by the swapped
+    policy, so the breaker's value is the with/without delta on the SAME
+    scripted outage — without it every post-swap trap fails to stream
+    end; with it the outage is bounded at the trip and the trailing
+    stream is clean. (Buckets are by completion seq; a query planned in
+    the same scheduler tick the trip lands in may still carry the bad
+    plan, which is why the bound is 'trailing third clean', not 'zero
+    after the trip instant'.)"""
+    comps_nb, _, _, n, swap_at = _breaker_serve(
+        meta, wl, n_lanes=n_lanes, with_breaker=False)
+    comps, brk, store, n, swap_at = _breaker_serve(
+        meta, wl, n_lanes=n_lanes, with_breaker=True)
+
+    fails = lambda cs: sum(c.result.failed for c in cs)
+    tail = [c for c in comps if c.seq >= (2 * n) // 3]
+    out = {
+        "n_queries": n, "swap_at": swap_at,
+        "trips": [{"seq": s, "bad_step": b, "restored_step": r,
+                   "reason": why} for s, b, r, why in brk.trips],
+        "failed_without_breaker": fails(comps_nb),
+        "failed_with_breaker": fails(comps),
+        "pre_swap_failed": fails([c for c in comps if c.seq < swap_at]),
+        "tail_third_failed": fails(tail),
+        "serving_step_final": store.serving_step,
+        "mode_final": store.mode,
+    }
+    healed = (len(brk.trips) == 1 and out["pre_swap_failed"] == 0
+              and out["failed_with_breaker"] > 0
+              and 2 * out["failed_with_breaker"] <=
+              out["failed_without_breaker"]
+              and out["tail_third_failed"] == 0
+              and store.serving_step == 1)
+    return out, healed
+
+
+# ------------------------------------------------------------------- main
+def main(argv=None):
+    args = bench_args(argv, lanes=6)
+    from repro.core.encoding import WorkloadMeta
+    from repro.sql import workloads
+
+    scale = 0.06 if args.smoke else 0.2
+    n_queries = 40 if args.smoke else 150
+    drift_at = 10 if args.smoke else 25
+    rate = 1.0
+    # full scale: grown (ci x mi) is ~13.9M rows, over the default 10M
+    # cap; at smoke scale it is only ~2.2M, so the cap drops to 1.5M to
+    # keep the trap armed (the safe order's final output is ~0.6M)
+    cap = 1_500_000 if args.smoke else None
+
+    wl = workloads.make_workload("job", n_train=48, n_test_per_template=1,
+                                 seed=7)
+    meta = WorkloadMeta.from_workload(wl)
+    db0, _ = _build_world(scale)
+    stream = _stream(wl, db0, n_queries=n_queries, rate=rate, seed=31,
+                     drift_at=drift_at)
+    n_traps = sum(a.query is not None and
+                  a.query.name.startswith("statstrap") for a in stream)
+    print(f"== failure recovery: {n_queries} queries ({n_traps} stats-trap,"
+          f" OOM post-drift), chaos seed {CHAOS_SEED} "
+          f"(crash {P_CRASH}/stage, transient {P_TRANSIENT}/stage, "
+          f"slow {P_SLOW}/run x{SLOW_FACTOR[0]:.0f}-{SLOW_FACTOR[1]:.0f}, "
+          f"corrupt {P_CORRUPT}/query), "
+          f"{args.lanes} lanes, SLO {SLO:.0f}s, timeout {TIMEOUT:.0f}s, "
+          f"OOM priced at detect+{SPILL_S:.0f}s ==")
+
+    predictor = _hedge_predictor(meta, stream, scale=scale, cap=cap,
+                                 n_lanes=args.lanes, smoke=args.smoke)
+
+    arms = {}
+    for arm in ("none", "blind", "resume", "full"):
+        comps, stats, mgr, host = _serve_arm(
+            arm, stream=stream, meta=meta, predictor=predictor,
+            scale=scale, cap=cap, n_lanes=args.lanes)
+        arms[arm] = _metrics(comps, stats, mgr, host, n_queries)
+        m = arms[arm]
+        kinds = ",".join(f"{k}:{v}" for k, v in
+                         sorted(m["failure_kinds"].items())) or "-"
+        print(f"{arm:7s} p50={m['p50']:6.2f}s p99={m['p99']:6.2f}s "
+              f"goodput={m['goodput']:.2f} failed={m['failed']:3d} "
+              f"[{kinds}] retried={m['n_retried']:3d} "
+              f"recovered={m['n_recovered']:3d} hedged={m['n_hedged']:2d}")
+
+    breaker, breaker_heals = _breaker_demo(meta, wl,
+                                           n_lanes=args.lanes)
+    print(f"breaker: trips={len(breaker['trips'])} "
+          f"bad-swap failures without={breaker['failed_without_breaker']} "
+          f"with={breaker['failed_with_breaker']} "
+          f"(pre-swap={breaker['pre_swap_failed']}, "
+          f"tail third={breaker['tail_third_failed']}) "
+          f"serving_step={breaker['serving_step_final']} -> "
+          f"healed={breaker_heals}")
+
+    # ------------------------------------------------------------- gates
+    nn, bl, fl = arms["none"], arms["blind"], arms["full"]
+    rs = arms["resume"]
+    full_beats_none = (fl["goodput"] > nn["goodput"]
+                       and fl["p99"] < nn["p99"])
+    full_beats_blind = (fl["goodput"] > bl["goodput"]
+                        and fl["p99"] < bl["p99"])
+    fallback_rescues = (rs["recovery"]["n_replanned"] > 0
+                        and rs["failed"] < bl["failed"])
+    # smoke gates on the mechanics only (a 40-query stream is too short
+    # for stable p99 ordering); the full run must clear everything
+    ok = bool(fallback_rescues and breaker_heals) if args.smoke else bool(
+        full_beats_none and full_beats_blind and fallback_rescues
+        and breaker_heals)
+    print(f"gates: full_beats_none={full_beats_none} "
+          f"full_beats_blind={full_beats_blind} "
+          f"fallback_rescues={fallback_rescues} "
+          f"breaker_heals={breaker_heals} -> ok={ok}")
+
+    csv_line("faults_none_goodput", 0, nn["goodput"])
+    csv_line("faults_full_goodput", 0, fl["goodput"])
+    csv_line("faults_none_p99_s", 0, nn["p99"])
+    csv_line("faults_full_p99_s", 0, fl["p99"])
+    emit_bench_json({
+        "smoke": args.smoke, "scale": scale, "n_queries": n_queries,
+        "n_lanes": args.lanes, "rate_qps": rate, "drift_at": drift_at,
+        "growth_x": GROWTH_X, "slo_s": SLO, "timeout_s": TIMEOUT,
+        "oom_spill_s": SPILL_S, "chaos": {
+            "seed": CHAOS_SEED, "p_crash": P_CRASH,
+            "p_transient": P_TRANSIENT, "p_slow": P_SLOW,
+            "p_corrupt": P_CORRUPT, "slow_factor": list(SLOW_FACTOR)},
+        "hedge_factor": HEDGE_FACTOR,
+        "arms": arms, "breaker": breaker,
+        "gates": {"full_beats_none": full_beats_none,
+                  "full_beats_blind": full_beats_blind,
+                  "fallback_rescues": fallback_rescues,
+                  "breaker_heals": breaker_heals, "ok": ok},
+    }, name="BENCH_faults.json")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if main() else 1)

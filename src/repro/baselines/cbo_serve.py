@@ -29,11 +29,14 @@ __all__ = ["CboReplanAgent"]
 
 class CboReplanAgent:
     def __init__(self, meta: WorkloadMeta,
-                 families=("cbo", "lead", "noop")):
+                 families=("cbo", "lead", "noop"), max_steps: int = 1):
         self.meta = meta
-        # ONE hook step: the policy only ever acts pre-execution, so a
-        # larger budget would just spend scheduler ticks on no-ops
-        self.cfg = AgentConfig(max_steps=1, families=tuple(families))
+        # Default ONE hook step: the policy only ever acts pre-execution,
+        # so a larger budget would just spend scheduler ticks on no-ops.
+        # A larger `max_steps` buys mid-run stage boundaries (the extra
+        # steps are no-ops), which is what the hedging control plane
+        # needs to OBSERVE an overrunning lane before it finishes.
+        self.cfg = AgentConfig(max_steps=max_steps, families=tuple(families))
         self.space = ActionSpace(meta.n_tables_max, self.cfg.families)
         self.cbo_idx = 0                      # action 0 == ("cbo", 1)
 

@@ -65,7 +65,11 @@ def finalize_trajectory(traj: Trajectory, res: RunResult, query, est,
         except (KeyError, IndexError, ValueError):
             pass          # un-encodable terminal plan: critic falls back to
             #               the realized value -sqrt(T) in ppo_update
-    traj.t_execute = cluster.timeout if res.failed else res.latency
+    # failed runs already carry their failure charge in res.latency (the
+    # cluster's failure_charge: full timeout by default, detection time
+    # under oom_charge="detect") — the learner's -sqrt(T) target matches
+    # whatever the scheduler actually charged the lane
+    traj.t_execute = res.latency
     traj.failed = res.failed
     # C_plan = hook wall time (model inference + Alg. 2) + CBO re-planning
     res.plan_time += traj.hook_seconds + extra_plan

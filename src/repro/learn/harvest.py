@@ -26,6 +26,7 @@ class TrajectoryHarvester:
         self.n_seen = 0
         self.n_harvested = 0
         self.n_empty = 0
+        self.n_retried = 0
         self._sched = None
 
     def attach(self, scheduler) -> None:
@@ -43,9 +44,19 @@ class TrajectoryHarvester:
         self.replay.add(Experience(
             seq=comp.seq, query_name=comp.query.name, traj=comp.traj,
             latency=comp.result.latency, failed=comp.result.failed,
-            finish_t=comp.finish_t, tables=tables, versions=versions))
+            finish_t=comp.finish_t, tables=tables, versions=versions,
+            # recovery tags: the scheduler emits one Completion per query
+            # (the final attempt), so replay sees retried queries once —
+            # tagged, not duplicated; completion-like objects without the
+            # recovery fields read as single untried attempts
+            attempts=getattr(comp, "attempts", 1),
+            recovered=getattr(comp, "recovered", False),
+            hedged=getattr(comp, "hedged", False)))
         self.n_harvested += 1
+        if getattr(comp, "attempts", 1) > 1:
+            self.n_retried += 1
 
     def stats(self) -> Dict[str, float]:
         return {"seen": self.n_seen, "harvested": self.n_harvested,
-                "empty": self.n_empty, **self.replay.stats()}
+                "empty": self.n_empty, "retried": self.n_retried,
+                **self.replay.stats()}

@@ -43,6 +43,12 @@ class Experience:
     tables: Tuple[str, ...]           # base tables the query touches
     versions: Dict[str, int]          # per-table versions at completion
     harvest_idx: int = -1             # completion count at harvest time
+    # failure-recovery tags (serve.recover): exactly ONE Experience is
+    # harvested per query — the FINAL attempt's — so replay never
+    # double-counts a retried query; these record what it took.
+    attempts: int = 1                 # lane admissions the query consumed
+    recovered: bool = False           # succeeded after >=1 failed attempt
+    hedged: bool = False              # resolved through a hedge race
 
 
 class ReplayBuffer:

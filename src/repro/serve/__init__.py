@@ -44,6 +44,14 @@ Four cooperating pieces, each in its own module:
                 stats gain a per-tenant breakdown (SLO-miss rate,
                 rejected/degraded counts, partition cache counters).
 
+  recover/      Failure-recovery control plane: seeded FaultInjector,
+                stage-resume retry ladder with re-planned OOM fallbacks,
+                hedged stragglers, and the post-swap policy circuit
+                breaker — all wired in through one `RecoveryManager`
+                passed as `LaneScheduler(recovery=...)`. Inert by
+                default: without it (or with the injector disabled and
+                no retry/hedge/breaker) completions are bit-identical.
+
   qos/          SLO-aware multi-tenant control plane: tenant registry
                 (token buckets, fair share, cache budgets), admission-
                 time latency predictor, degradation ladder, and the
@@ -77,6 +85,13 @@ _EXPORTS = {
     "RefreshPolicy": "repro.serve.drift",
     "CoverageProbeSet": "repro.serve.drift",
     "QoSAdmission": "repro.serve.qos",
+    "FaultInjector": "repro.serve.recover",
+    "ScriptedFaults": "repro.serve.recover",
+    "RetryPolicy": "repro.serve.recover",
+    "HedgePolicy": "repro.serve.recover",
+    "PolicyBreaker": "repro.serve.recover",
+    "RecoveryManager": "repro.serve.recover",
+    "RecoveryStats": "repro.serve.recover",
     "DegradationLadder": "repro.serve.qos",
     "LatencyPredictor": "repro.serve.qos",
     "TenantRegistry": "repro.serve.qos",

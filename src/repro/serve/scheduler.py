@@ -72,6 +72,7 @@ class Arrival:
     tenant: str = "default"
     deadline: Optional[float] = None  # absolute virtual-clock deadline
     not_before: float = 0.0           # admission deferral floor
+    ticket: object = None             # recover.RetryTicket on re-admissions
 
 
 @dataclasses.dataclass
@@ -91,6 +92,13 @@ class Completion:
     hook_budget: Optional[int] = None  # None = agent default (full budget)
     degraded: bool = False             # admission shrank the hook budget
     predicted: Optional[float] = None  # admission-time latency estimate
+    attempts: int = 1                  # lane admissions this query consumed
+    recovered: bool = False            # succeeded after >=1 failed attempt
+    hedged: bool = False               # resolved through a hedge race
+    failure_kind: str = ""             # final failure kind, or (recovered)
+    #                                    the kind of the FIRST failed attempt
+    first_admit_t: float = 0.0         # attempt 1's admission (== admit_t
+    #                                    for single-attempt queries)
 
     @property
     def latency(self) -> float:
@@ -140,6 +148,9 @@ class _Lane:
     hook_budget: Optional[int] = None  # admission-assigned (None = full)
     degraded: bool = False
     predicted: Optional[float] = None
+    held: Optional[float] = None       # hedge-race stash: the run finished
+    #   at this virtual time but its completion is deferred until the pair
+    #   resolves — the lane stays occupied (blocks refill + write barriers)
 
     @property
     def next_event(self) -> float:
@@ -173,10 +184,12 @@ class LaneScheduler:
                  stage: int = 3, explore: bool = False,
                  cluster: Optional[ClusterModel] = None,
                  policy: str = "async", window: Optional[float] = None,
-                 reuse_stages: bool = True, admission=None):
+                 reuse_stages: bool = True, admission=None, recovery=None):
         assert policy in ("async", "edf", "lockstep"), policy
         assert admission is None or policy != "lockstep", \
             "admission control needs per-lane refill (async/edf)"
+        assert recovery is None or policy != "lockstep", \
+            "the recovery plane needs per-lane refill (async/edf)"
         self.db, self.est, self.agent = db, est, agent
         self.n_lanes, self.stage, self.explore = n_lanes, stage, explore
         self.cluster = cluster if cluster is not None else ClusterModel()
@@ -221,6 +234,13 @@ class LaneScheduler:
         self.on_delta: List[Callable[[float, DeltaBatch], None]] = []
         if admission is not None:     # after on_complete: attach hooks it
             admission.attach(self)
+        # failure-recovery control plane (serve.recover.RecoveryManager):
+        # fault profiles at _start, retry/hedge interception at _finish,
+        # hedge launches each tick. None = no recovery seams on any path.
+        self.recovery = recovery
+        self._pending: deque = deque()
+        if recovery is not None:
+            recovery.attach(self)
 
     # ------------------------------------------------------------- driving
     def run(self, stream: Sequence[Arrival]) -> List[Completion]:
@@ -237,8 +257,13 @@ class LaneScheduler:
         if self.admission is not None:
             self.admission.prepare(stream)
         pending = deque(sorted(stream, key=lambda a: a.t))
+        self._pending = pending       # the recovery plane requeues retries
         while True:
             self._admit(pending)
+            if self.recovery is not None:
+                # speculative execution claims lanes the admission queue
+                # left idle (so hedges never starve real arrivals)
+                self.recovery.maybe_hedge()
             susp = [l for l in self.lanes if l.state is not None]
             if not susp:
                 assert not pending, "admission stalled with idle lanes"
@@ -334,8 +359,10 @@ class LaneScheduler:
             # let the ticks sharpen the busy lanes' lower bounds. (This is
             # what keeps a 300s straggler's lane from swallowing queries
             # another lane would serve within a second.)
+            # (a held lane — hedge stash — bounds at its stashed finish)
             busy_bound = min(
-                (max(item.t, l.next_event) for l in self.lanes
+                (max(item.t, l.next_event if l.state is not None
+                     else l.held) for l in self.lanes
                  if l.run is not None), default=np.inf)
             if start_t > busy_bound:
                 return
@@ -366,16 +393,31 @@ class LaneScheduler:
                hook_budget: Optional[int] = None, degraded: bool = False,
                predicted: Optional[float] = None) -> None:
         q = arrival.query
+        ticket = arrival.ticket
+        if ticket is not None:
+            # a retry/hedge re-admission: the ticket overrides the hook
+            # budget (0 by default — retries run the resumed/replanned
+            # remainder without competing for policy bandwidth)
+            hook_budget = ticket.hook_budget
         steps = self.agent.cfg.max_steps if hook_budget is None \
             else min(hook_budget, self.agent.cfg.max_steps)
         cache = None
         shared = getattr(self.db, "_stage_cache", None)
         if self.reuse_stages and isinstance(shared, PartitionedStageCache):
             cache = shared.partition(arrival.tenant)
-        run = AdaptiveRun(self.db, q, syntactic_plan(q), self.est,
+        plan = syntactic_plan(q) if ticket is None or ticket.plan is None \
+            else ticket.plan
+        faults = None
+        if self.recovery is not None:
+            faults = self.recovery.run_faults(arrival)
+            self.recovery.on_admit(arrival, admit_t)
+        run = AdaptiveRun(self.db, q, plan, self.est,
                           self.cluster, max_hook_steps=steps,
                           plan_time=0.0, reuse_stages=self.reuse_stages,
-                          cache=cache)
+                          cache=cache, faults=faults,
+                          init_mats=None if ticket is None else ticket.mats,
+                          init_stages_done=0 if ticket is None
+                          else ticket.stages_done)
         lane.run, lane.traj = run, Trajectory()
         lane.key = as_key(arrival.seed if arrival.seed is not None
                           else lane.idx)
@@ -459,15 +501,49 @@ class LaneScheduler:
         # decision cost is a host metric (traj.hook_seconds / C_plan), kept
         # off the clock so completion times are bit-reproducible
         finish_t = lane.admit_t + res.latency
-        comp = Completion(
-            seq=arr.seq, query=arr.query, seed=arr.seed, arrival_t=arr.t,
-            admit_t=lane.admit_t, finish_t=finish_t, lane=lane.idx,
-            tick=self.ticks, traj=traj, result=res, tenant=arr.tenant,
-            deadline=arr.deadline, hook_budget=lane.hook_budget,
-            degraded=lane.degraded, predicted=lane.predicted)
+        if self.recovery is not None and \
+                self.recovery.on_finish(lane, traj, res, finish_t):
+            return                    # requeued as a retry, or hedge-stashed
+        comp = self._build_comp(arr, traj, res, lane.admit_t, finish_t,
+                                lane.idx, lane.hook_budget, lane.degraded,
+                                lane.predicted)
         self.completions.append(comp)
-        lane.free_at = finish_t
-        lane.run = lane.state = lane.arrival = None
-        lane.hook_budget, lane.degraded, lane.predicted = None, False, None
+        self._release(lane, finish_t)
         for cb in self.on_complete:
             cb(comp)
+
+    def _build_comp(self, arr: Arrival, traj: Trajectory, res: RunResult,
+                    admit_t: float, finish_t: float, lane_idx: int,
+                    hook_budget: Optional[int], degraded: bool,
+                    predicted: Optional[float], hedged: bool = False,
+                    first_admit: Optional[float] = None) -> Completion:
+        ticket = arr.ticket
+        attempts = 1 if ticket is None else ticket.attempt
+        recovered = attempts > 1 and not res.failed
+        if res.failed:
+            kind = res.failure_kind
+        else:
+            kind = ticket.kinds[0] if recovered and ticket.kinds else ""
+        if first_admit is None:
+            first_admit = admit_t if ticket is None else ticket.first_admit_t
+        return Completion(
+            seq=arr.seq, query=arr.query, seed=arr.seed, arrival_t=arr.t,
+            admit_t=admit_t, finish_t=finish_t, lane=lane_idx,
+            tick=self.ticks, traj=traj, result=res, tenant=arr.tenant,
+            deadline=arr.deadline, hook_budget=hook_budget,
+            degraded=degraded, predicted=predicted, attempts=attempts,
+            recovered=recovered, hedged=hedged, failure_kind=kind,
+            first_admit_t=first_admit)
+
+    def _emit(self, comp: Completion) -> None:
+        """Record a recovery-plane completion (the manager has already
+        released the lanes involved) and fire the completion hooks."""
+        self.completions.append(comp)
+        for cb in self.on_complete:
+            cb(comp)
+
+    def _release(self, lane: _Lane, free_at: float) -> None:
+        lane.free_at = free_at
+        lane.run = lane.state = lane.arrival = None
+        lane.hook_budget, lane.degraded, lane.predicted = None, False, None
+        lane.held = None

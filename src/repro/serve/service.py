@@ -52,6 +52,9 @@ class TenantStats:
     latency_p99: float = 0.0
     queue_wait_mean: float = 0.0
     cache: Optional[Dict[str, float]] = None   # this tenant's partition
+    failure_kinds: Optional[Dict[str, int]] = None  # failed, by kind
+    n_recovered: int = 0              # succeeded after >=1 failed attempt
+    n_hedged: int = 0                 # resolved through a hedge race
 
     def as_dict(self) -> Dict:
         return _round_floats(dataclasses.asdict(self))
@@ -78,6 +81,13 @@ class ServiceStats:
     n_slo_miss: int = 0
     slo_miss_rate: float = 0.0       # over completed queries with deadlines
     per_tenant: Optional[Dict[str, TenantStats]] = None
+    # ---- failure-recovery breakdown (serve.recover) ---------------------
+    failure_kinds: Optional[Dict[str, int]] = None  # failed comps, by kind
+    #   (oom vs timeout vs injected crash/transient)
+    attempts_total: int = 0          # lane admissions incl. retries
+    n_retried: int = 0               # completions that needed >1 attempt
+    n_recovered: int = 0             # succeeded after >=1 failed attempt
+    n_hedged: int = 0                # resolved through a hedge race
 
     def as_dict(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -90,6 +100,15 @@ def _slo_counts(comps: List[Completion]) -> Tuple[int, float]:
     return n_miss, (n_miss / len(with_dl) if with_dl else 0.0)
 
 
+def _failure_kinds(comps: List[Completion]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for c in comps:
+        if c.result.failed:
+            k = c.failure_kind or "unknown"
+            out[k] = out.get(k, 0) + 1
+    return out
+
+
 class QueryService:
     """Online query service over a database + trained (or cold) agent."""
 
@@ -98,7 +117,8 @@ class QueryService:
                  policy: str = "async", window: Optional[float] = None,
                  cache_bytes: int = 256 * 1024 * 1024,
                  reuse_stages: bool = True, explore: bool = False,
-                 hooks: Sequence = (), tenants=None, admission=None):
+                 hooks: Sequence = (), tenants=None, admission=None,
+                 recovery=None):
         """`hooks` are objects with an `attach(scheduler)` method (e.g. the
         lifelong-learning loop's `learn.TrajectoryHarvester` /
         `learn.BackgroundLearner`); each is attached to every scheduler
@@ -110,7 +130,9 @@ class QueryService:
         cache per tenant (each spec's `cache_bytes`, else `cache_bytes`)
         and switches the stats to a per-tenant breakdown. `admission` (a
         `serve.qos.AdmissionPolicy`) plugs admission control into every
-        scheduler this service creates. Both None = the PR-2 path,
+        scheduler this service creates. `recovery` (a
+        `serve.recover.RecoveryManager`) plugs the failure-recovery
+        control plane in the same way. All None = the PR-2 path,
         bit-identical."""
         self.db = db
         self.agent = agent
@@ -122,6 +144,7 @@ class QueryService:
         self.hooks = list(hooks)
         self.tenants = tenants
         self.admission = admission
+        self.recovery = recovery
         if reuse_stages:
             if tenants is not None:
                 # every REGISTERED tenant gets its own partition (explicit
@@ -146,7 +169,7 @@ class QueryService:
             self.db, self.est, self.agent, n_lanes=self.n_lanes,
             explore=self.explore, cluster=self.cluster, policy=self.policy,
             window=self.window, reuse_stages=self.reuse_stages,
-            admission=self.admission)
+            admission=self.admission, recovery=self.recovery)
         for h in self.hooks:
             h.attach(self.scheduler)
         comps = self.scheduler.run(list(stream))
@@ -210,7 +233,10 @@ class QueryService:
                 latency_p99=float(np.percentile(lat, 99)) if cs else 0.0,
                 queue_wait_mean=float(np.mean([c.queue_wait for c in cs]))
                 if cs else 0.0,
-                cache=part.stats.as_dict() if part is not None else None)
+                cache=part.stats.as_dict() if part is not None else None,
+                failure_kinds=_failure_kinds(cs) or None,
+                n_recovered=sum(c.recovered for c in cs),
+                n_hedged=sum(c.hedged for c in cs))
         return out
 
     def _stats(self, comps: List[Completion]) -> ServiceStats:
@@ -249,4 +275,9 @@ class QueryService:
             n_degraded=sum(c.degraded for c in comps),
             n_slo_miss=n_miss, slo_miss_rate=miss_rate,
             per_tenant=self._tenant_stats(comps, rejects, makespan)
-            if self.tenants is not None else None)
+            if self.tenants is not None else None,
+            failure_kinds=_failure_kinds(comps) or None,
+            attempts_total=sum(c.attempts for c in comps),
+            n_retried=sum(c.attempts > 1 for c in comps),
+            n_recovered=sum(c.recovered for c in comps),
+            n_hedged=sum(c.hedged for c in comps))

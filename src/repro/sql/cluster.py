@@ -29,6 +29,18 @@ class ClusterModel:
     aqe_coalesce: bool = True          #   coalesces small partitions
     timeout: float = 300.0             # per-query cap (s), as in §VII-A4d
     materialize_cap: int = 10_000_000  # rows; beyond this the join OOMs
+    # ---- failure pricing ---------------------------------------------------
+    # "timeout": an OOM is charged the full per-query timeout (the PR-1..5
+    #   pricing — the job burns its whole slot before anyone notices).
+    # "detect": an OOM is charged at DETECTION time (virtual seconds elapsed
+    #   when the executor died) plus `oom_spill_penalty` seconds of spill /
+    #   teardown — the failure frees the lane when it actually happens,
+    #   which is what makes retry ladders worth their backoff.
+    # Injected faults ("crash"/"transient", see serve.recover.faults) are
+    # always charged at detection time; a wall-clock "timeout" is always the
+    # full timeout. Default preserves bit-identity with the legacy pricing.
+    oom_charge: str = "timeout"        # "timeout" | "detect"
+    oom_spill_penalty: float = 0.0     # extra seconds charged on detect OOM
 
     # ---- stage cost terms -------------------------------------------------
     def scan_time(self, bytes_: float) -> float:
@@ -51,3 +63,14 @@ class ClusterModel:
 
     def broadcast_oom(self, build_bytes: float) -> bool:
         return build_bytes > self.executor_mem
+
+    def failure_charge(self, kind: str, elapsed: float) -> float:
+        """Virtual seconds a failed run occupies its lane. `elapsed` is the
+        simulated time at which the failure was detected."""
+        assert self.oom_charge in ("timeout", "detect"), self.oom_charge
+        if kind == "timeout":
+            return self.timeout
+        if kind == "oom" and self.oom_charge == "timeout":
+            return self.timeout
+        extra = self.oom_spill_penalty if kind == "oom" else 0.0
+        return min(self.timeout, elapsed + extra)

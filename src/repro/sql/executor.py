@@ -31,9 +31,11 @@ from repro.sql.query import Query
 
 
 class QueryFailure(Exception):
+    # natural kinds: "oom" | "timeout"; injected (serve.recover.faults):
+    # "crash" (lane lost, in-flight work gone) | "transient" (stage error)
     def __init__(self, kind: str, msg: str = ""):
         super().__init__(f"{kind}: {msg}")
-        self.kind = kind               # "oom" | "timeout"
+        self.kind = kind
 
 
 @dataclasses.dataclass
@@ -376,14 +378,27 @@ class AdaptiveRun:
                  plan_time: float = 0.0,
                  aqe_switching: bool = True,
                  reuse_stages: bool = True,
-                 cache: Optional[StageCache] = None):
+                 cache: Optional[StageCache] = None,
+                 faults=None,
+                 init_mats: Optional[Dict[frozenset, MaterializedRel]] = None,
+                 init_stages_done: int = 0):
+        """`faults` is an optional per-run fault profile (an object with
+        `charge(seconds, state) -> seconds` that may raise `QueryFailure`,
+        see serve.recover.faults) consulted at every latency charge; None
+        keeps the execution path bit-identical. `init_mats` /
+        `init_stages_done` seed the run with already-materialized stage
+        results (a retry resuming from its failed attempt's last stage
+        boundary: it pays only the stages the plan still contains)."""
         self.cluster = cluster if cluster is not None else ClusterModel()
         self.query = query
         self.max_hook_steps = max_hook_steps
         self.plan_time = plan_time
         self.aqe_switching = aqe_switching
-        self.state = RuntimeState(query, copy_plan(plan), {}, est, 0, 0.0, 0,
+        self.state = RuntimeState(query, copy_plan(plan),
+                                  dict(init_mats) if init_mats else {},
+                                  est, 0, 0.0, int(init_stages_done),
                                   self.cluster)
+        self._faults = faults
         self.result: Optional[RunResult] = None
         self._ex = Executor(db, self.cluster, reuse_stages=reuse_stages,
                             cache=cache)
@@ -419,7 +434,10 @@ class AdaptiveRun:
         except StopIteration:
             cl, st = self.cluster, self.state
             if self._failure is not None:
-                self.result = RunResult(cl.timeout, self.plan_time, True,
+                # failure pricing is the cluster's call: full timeout for
+                # the legacy modes, detection-time + spill otherwise
+                charge = cl.failure_charge(self._failure.kind, st.elapsed)
+                self.result = RunResult(charge, self.plan_time, True,
                                         self._failure.kind, self._stages,
                                         self._tot_shuffles, self._tot_sbytes,
                                         st.plan, self._bushy)
@@ -435,6 +453,10 @@ class AdaptiveRun:
                                      self.query)
 
         def charge(seconds: float):
+            if self._faults is not None:
+                # the fault profile may stretch the charge (straggler
+                # multiplier) or abort it mid-stage (crash/transient)
+                seconds = self._faults.charge(seconds, state)
             state.elapsed += seconds
             if state.elapsed >= cluster.timeout:
                 raise QueryFailure("timeout", f"{state.elapsed:.1f}s")

@@ -45,6 +45,40 @@ def make_agent(workload, seed: int = 0, **cfg_kw) -> AqoraAgent:
                       AgentConfig(**cfg_kw), seed=seed)
 
 
+class NoopServeAgent:
+    """Scripted always-noop policy: plans stay exactly syntactic, so
+    failure scenarios are a pure function of data + plan (no random-init
+    policy interference). `max_steps` > 1 buys mid-run stage boundaries —
+    what the hedging control plane needs to observe an overrun."""
+
+    def __init__(self, meta: WorkloadMeta, max_steps: int = 1):
+        from repro.core.actions import ActionSpace
+        self.meta = meta
+        self.cfg = AgentConfig(max_steps=max_steps)
+        self.space = ActionSpace(meta.n_tables_max, self.cfg.families)
+
+    def act_batch(self, feat, left, right, mask, amask, keys, *,
+                  explore: bool = False):
+        B = amask.shape[0]
+        return (np.full(B, self.space.noop_idx, np.int32),
+                np.zeros(B, np.float32), keys)
+
+    def act(self, enc, am, *, explore: bool = False):
+        a, lp, _ = self.act_batch(None, None, None, None, am[None],
+                                  np.zeros((1, 2), np.uint32))
+        return int(a[0]), float(lp[0])
+
+
+def noop_agent_for(*queries, max_steps: int = 1,
+                   max_tables: int = 3) -> NoopServeAgent:
+    """NoopServeAgent whose encoding meta covers exactly `queries`."""
+    from repro.sql.workloads import Workload
+    wl = Workload(name="scenario", max_tables=max_tables,
+                  train=list(queries), test=[])
+    return NoopServeAgent(WorkloadMeta.from_workload(wl),
+                          max_steps=max_steps)
+
+
 def fast_subset(wl) -> List[Query]:
     """Dimension-join-ish templates: the sub-second traffic every
     scenario mixes around its stragglers."""

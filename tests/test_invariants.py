@@ -117,6 +117,82 @@ def test_scheduler_policies_agree_on_service_times(job_workload, agent,
         assert ca.result.latency == cl.result.latency
 
 
+# ------------------------------------------------- chaos (serve.recover)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_virtual_clock_invariants_survive_fault_schedules(job_workload,
+                                                          agent, seed):
+    """The PR-5 invariants hold under seeded chaos: whatever mix of
+    crashes, transients, stragglers, retries and hedges a fault schedule
+    produces, completions respect causality, lanes stay serialized,
+    deltas remain STRICT write barriers (retries of pre-delta queries
+    drain before the delta applies), every query still emits exactly one
+    Completion — and the whole storm replays bit-identically."""
+    from scenarios import FixedPredictor
+    from repro.serve.recover import (FaultInjector, HedgePolicy,
+                                     RecoveryManager, RetryPolicy)
+
+    rng = np.random.default_rng(500 + seed)
+    stream = _random_stream(rng, n_queries=12, n_deltas=2)
+    n_lanes = int(rng.integers(2, 5))
+
+    def serve():
+        db = fresh_db(scale=0.05, seed=seed)
+        mgr = RecoveryManager(
+            injector=FaultInjector(seed=900 + seed, p_crash=0.05,
+                                   p_transient=0.25, p_slow=0.2,
+                                   p_corrupt=0.1),
+            retry=RetryPolicy(max_attempts=3, backoff=0.2),
+            hedge=HedgePolicy(factor=4.0, predictor=FixedPredictor()))
+        sched = LaneScheduler(db, Estimator(db, db.stats), agent,
+                              n_lanes=n_lanes, recovery=mgr)
+        return sched.run(stream), sched, mgr, db
+
+    comps, sched, mgr, db = serve()
+    queries = [a for a in stream if a.delta is None]
+    deltas = [a for a in stream if a.delta is not None]
+    assert len(comps) == len(queries)            # one Completion per query
+    assert len(sched.delta_log) == len(deltas)
+    assert mgr.stats.n_failures > 0, "chaos at these rates must bite"
+
+    by_seq = {}
+    for c in comps:
+        assert c.finish_t > c.admit_t >= c.arrival_t
+        assert c.admit_t >= c.first_admit_t >= 0.0
+        assert c.attempts >= 1
+        if c.recovered:
+            assert c.attempts > 1 and not c.result.failed
+        by_seq[c.seq] = c
+    assert [c.seq for c in comps] == sorted(by_seq)   # stream order out
+
+    # per-lane serialization: final-attempt occupancies on one lane never
+    # overlap (intermediate attempts ran under the same exclusivity — the
+    # scheduler asserts a lane is free before every _start)
+    for lane in range(n_lanes):
+        mine = sorted((c for c in comps if c.lane == lane),
+                      key=lambda c: c.admit_t)
+        for prev, nxt in zip(mine, mine[1:]):
+            assert nxt.admit_t >= prev.finish_t
+
+    # strict write barriers, retries included: everything ahead of a delta
+    # in stream order (plus all its retries) drains before the apply
+    seq_of = {id(a): i for i, a in enumerate(stream)}
+    for (t_apply, delta, counts), d_arr in zip(sched.delta_log, deltas):
+        d_pos = seq_of[id(d_arr)]
+        assert all(c.finish_t <= t_apply
+                   for c in comps if c.seq < d_pos)
+        assert all(c.admit_t >= t_apply
+                   for c in comps if c.seq > d_pos)
+    assert db.table_version("movie_info") == len(deltas)
+
+    # the same chaos replays bit-identically
+    comps2, _, mgr2, _ = serve()
+    assert [(c.seq, c.admit_t, c.finish_t, c.lane, c.attempts,
+             c.result.failed, c.hedged) for c in comps] == \
+        [(c.seq, c.admit_t, c.finish_t, c.lane, c.attempts,
+          c.result.failed, c.hedged) for c in comps2]
+    assert mgr.stats.as_dict() == mgr2.stats.as_dict()
+
+
 # ------------------------------------------------------ cache accounting
 def _check_partition(c):
     assert c.bytes == sum(nb for _, nb in c._entries.values())

@@ -1,0 +1,444 @@
+"""Failure-recovery control plane (serve/recover): fault injection,
+stage-resume retries, re-planned OOM fallbacks, hedged stragglers, and
+the post-swap policy circuit breaker.
+
+Everything runs on the scenario harness (tests/scenarios.py) and the
+virtual clock, so each property is pinned exactly:
+
+  * the injector is a pure function of its seed — the same chaos replays
+    bit-identically through any scheduler shape;
+  * with the injector disabled (and default failure pricing) the whole
+    recovery plane is INERT: completions bit-identical to a scheduler
+    with no recovery plane at all;
+  * a resume retry pays only the failed stage onwards; a crash restarts
+    from scratch; an OOM fallback re-plans around the blown join while a
+    blind retry deterministically re-OOMs;
+  * a hedge's loser is cancelled at the winner's finish and the race is
+    priced honestly;
+  * a tripped breaker restores the incumbent's exact parameters.
+"""
+import numpy as np
+import pytest
+
+from scenarios import (fast_query, fresh_db, mi_join_query, noop_agent_for,
+                       straggler_query, trap_query)
+
+from repro.serve.deltas import DeltaBatch, apply_delta
+from repro.serve.recover import (FaultInjector, HedgePolicy, PolicyBreaker,
+                                 RecoveryManager, RetryPolicy, ScriptedFaults)
+from repro.serve.scheduler import Arrival, LaneScheduler
+from repro.sql.cbo import Estimator
+from repro.sql.cluster import ClusterModel
+
+
+def _world(scale=0.06, seed=0):
+    db = fresh_db(scale=scale, seed=seed)
+    return db, Estimator(db, db.stats)
+
+
+def _serve(agent, stream, *, recovery=None, n_lanes=1, cluster=None,
+           world=None):
+    db, est = world if world is not None else _world()
+    sched = LaneScheduler(db, est, agent, n_lanes=n_lanes, cluster=cluster,
+                          recovery=recovery)
+    return sched.run(stream), sched
+
+
+def _comp_key(c):
+    return (c.seq, c.query.name, c.admit_t, c.finish_t, c.lane,
+            c.result.latency, c.result.failed, c.result.failure_kind,
+            c.attempts, c.recovered, c.hedged, c.failure_kind,
+            c.first_admit_t, tuple(c.traj.actions))
+
+
+# ------------------------------------------------------------- injector
+def test_fault_injector_is_a_pure_function_of_its_seed():
+    kw = dict(p_crash=0.05, p_transient=0.2, p_slow=0.3, p_corrupt=0.1)
+    a, b = FaultInjector(seed=42, **kw), FaultInjector(seed=42, **kw)
+    other = FaultInjector(seed=43, **kw)
+    keys = [(s, att, k) for s in range(40) for att in (1, 2, 1001)
+            for k in range(4)]
+    draws_a = [(a.stage_fault(s, att, k), a.run_slowdown(s, att))
+               for s, att, k in keys]
+    # query b in REVERSE order: decisions are keyed, not sequential
+    draws_b = [(b.stage_fault(s, att, k), b.run_slowdown(s, att))
+               for s, att, k in reversed(keys)]
+    assert draws_a == list(reversed(draws_b))
+    assert draws_a != [(other.stage_fault(s, att, k),
+                        other.run_slowdown(s, att)) for s, att, k in keys]
+    # a retry rolls fresh dice: attempts are independent key dimensions
+    fired = [ev for ev, _ in draws_a if ev is not None]
+    assert fired, "chaos at these rates must fire somewhere in 480 draws"
+    assert any(a.stage_fault(s, 1, k) != a.stage_fault(s, 2, k)
+               for s in range(40) for k in range(4))
+    # corruption picks are stream-independent too
+    tabs = ["title", "cast_info", "movie_info"]
+    assert [a.admit_corruption(s, tabs) for s in range(40)] == \
+        [b.admit_corruption(s, tabs) for s in range(40)]
+
+
+def test_chaos_replays_bit_identically_across_runs():
+    q = mi_join_query()
+    agent = noop_agent_for(q, *[fast_query(i) for i in range(4)],
+                           max_steps=2)
+    stream = [Arrival(0.2 * i, query=(q if i % 2 else fast_query(i)),
+                      seed=i + 1) for i in range(8)]
+
+    def chaos_run():
+        inj = FaultInjector(seed=5, p_crash=0.05, p_transient=0.3,
+                            p_slow=0.2)
+        mgr = RecoveryManager(injector=inj,
+                              retry=RetryPolicy(max_attempts=3))
+        comps, _ = _serve(agent, stream, recovery=mgr, n_lanes=2)
+        return [_comp_key(c) for c in comps], mgr.stats.as_dict()
+
+    (ca, sa), (cb, sb) = chaos_run(), chaos_run()
+    assert ca == cb and sa == sb
+    assert any(k[8] > 1 for k in ca), "the storm must force retries"
+
+
+def test_disabled_injector_is_bit_identical_to_no_recovery_plane():
+    """ISSUE gate: with the FaultInjector disabled and default pricing the
+    serve path is completion-bit-identical to the PR-5 stack — across a
+    natural OOM straggler AND a delta write barrier."""
+    q = mi_join_query()
+    agent = noop_agent_for(q, straggler_query(),
+                           *[fast_query(i) for i in range(3)], max_steps=2)
+    stream = [Arrival(0.0, query=straggler_query(), seed=9)] + \
+        [Arrival(0.05 * (i + 1), query=fast_query(i), seed=i + 1)
+         for i in range(3)] + \
+        [Arrival(0.3, delta=DeltaBatch("movie_info", n_append=900, seed=3)),
+         Arrival(0.35, query=q, seed=8)]
+
+    base, _ = _serve(agent, stream, n_lanes=2, world=_world(seed=1))
+    inert = RecoveryManager(injector=FaultInjector(
+        seed=7, p_crash=0.5, p_transient=0.4, p_slow=0.9, p_corrupt=0.9,
+        enabled=False))
+    got, _ = _serve(agent, stream, recovery=inert, n_lanes=2,
+                    world=_world(seed=1))
+    assert [_comp_key(c) for c in base] == [_comp_key(c) for c in got]
+    # the straggler's natural OOM is priced at the full timeout by default
+    oom = [c for c in base if c.result.failed]
+    assert oom and all(c.result.latency == ClusterModel().timeout
+                       for c in oom)
+    assert ClusterModel().failure_charge("oom", 3.0) == \
+        ClusterModel().timeout
+
+
+# ------------------------------------------------------- pricing (cluster)
+def test_oom_detect_pricing_charges_elapsed_plus_spill():
+    cl = ClusterModel(oom_charge="detect", oom_spill_penalty=2.5)
+    assert cl.failure_charge("oom", 3.0) == 5.5
+    assert cl.failure_charge("transient", 3.0) == 3.0
+    assert cl.failure_charge("timeout", 3.0) == cl.timeout
+    # capped at the timeout — detection can't cost more than giving up
+    assert cl.failure_charge("oom", cl.timeout + 10) == cl.timeout
+    # default stays the legacy pricing, bit for bit
+    assert ClusterModel().failure_charge("oom", 123.0) == \
+        ClusterModel().timeout
+
+
+# ---------------------------------------------------------------- retries
+def test_resume_retry_pays_only_the_failed_stage():
+    q = mi_join_query()
+    agent = noop_agent_for(q, max_steps=2)
+    stream = [Arrival(0.0, query=q, seed=5)]
+
+    base, _ = _serve(agent, stream)
+    stages = base[0].result.stages
+    assert len(stages) >= 2 and not base[0].result.failed
+
+    # kill the FINAL join charge (3-table left-deep: scan, scan, join,
+    # scan, join -> charge index 4) on attempt 1; resume on attempt 2
+    faults = ScriptedFaults(stage={(0, 1, 4): "transient"})
+    mgr = RecoveryManager(injector=faults,
+                          retry=RetryPolicy(max_attempts=2, backoff=0.25))
+    comps, _ = _serve(agent, stream, recovery=mgr)
+    c = comps[0]
+    assert (c.attempts, c.recovered, c.failure_kind) == (2, True,
+                                                         "transient")
+    assert mgr.stats.n_resumed == 1 and mgr.stats.n_failures == 1
+    # the resumed attempt re-ran ONLY the failed final join
+    assert c.finish_t - c.admit_t == pytest.approx(stages[-1].seconds,
+                                                   abs=1e-12)
+    # and was re-admitted exactly at failure + backoff: the failed attempt
+    # burned everything but the final join, plus the injected half-charge
+    fail_t = c.first_admit_t + base[0].result.latency \
+        - 0.5 * stages[-1].seconds
+    assert c.admit_t == pytest.approx(fail_t + 0.25, abs=1e-9)
+
+
+def test_crash_retry_restarts_from_scratch():
+    q = mi_join_query()
+    agent = noop_agent_for(q, max_steps=2)
+    stream = [Arrival(0.0, query=q, seed=5)]
+    base, _ = _serve(agent, stream)
+
+    faults = ScriptedFaults(stage={(0, 1, 4): "crash"})
+    mgr = RecoveryManager(injector=faults,
+                          retry=RetryPolicy(max_attempts=2, backoff=0.0))
+    comps, _ = _serve(agent, stream, recovery=mgr)
+    c = comps[0]
+    assert c.attempts == 2 and c.recovered and c.failure_kind == "crash"
+    assert mgr.stats.n_restarted == 1 and mgr.stats.n_resumed == 0
+    # in-flight state was lost: the retry re-pays the FULL run
+    assert c.finish_t - c.admit_t == pytest.approx(
+        base[0].result.latency, abs=1e-12)
+
+
+def test_retry_gives_up_after_max_attempts_and_emits_the_failure():
+    q = mi_join_query()
+    agent = noop_agent_for(q, max_steps=2)
+    # every attempt dies at its first charge
+    faults = ScriptedFaults(stage={(0, att, 0): "transient"
+                                   for att in range(1, 10)})
+    mgr = RecoveryManager(injector=faults,
+                          retry=RetryPolicy(max_attempts=3, backoff=0.5,
+                                            backoff_mult=2.0))
+    comps, _ = _serve(agent, [Arrival(0.0, query=q, seed=5)], recovery=mgr)
+    c = comps[0]
+    assert c.result.failed and not c.recovered
+    assert c.attempts == 3 and c.failure_kind == "transient"
+    assert mgr.stats.n_retries == 2 and mgr.stats.n_given_up == 1
+    assert mgr.stats.backoff_s == pytest.approx(0.5 + 1.0)
+    assert len(comps) == 1            # ONE completion, even for a give-up
+
+
+def _oom_trap_world():
+    """Stale-stats OOM trap: cast_info grows after ANALYZE, so the
+    syntactic (ci x mi) first join blows a small materialize cap while
+    the title-filtered order stays tiny (tests/scenarios.trap_query)."""
+    db = fresh_db()
+    est = Estimator(db, db.stats)          # catalog frozen pre-growth
+    apply_delta(db, DeltaBatch("cast_info", n_append=120_000, seed=9))
+    return db, est
+
+
+_TRAP_CLUSTER = ClusterModel(materialize_cap=400_000, timeout=60.0)
+
+
+def test_oom_fallback_replans_around_the_blown_join():
+    q = trap_query(0, 1900)
+    agent = noop_agent_for(q)
+    stream = [Arrival(0.0, query=q, seed=5)]
+
+    # rung 0 — no recovery: the trap OOMs and eats the full timeout
+    comps, _ = _serve(agent, stream, cluster=_TRAP_CLUSTER,
+                      world=_oom_trap_world())
+    assert comps[0].result.failed and comps[0].failure_kind == "oom"
+    assert comps[0].result.latency == _TRAP_CLUSTER.timeout
+
+    # rung 1 — blind retry (fallback off): the OOM is deterministic,
+    # restarting the same plan fails identically
+    mgr = RecoveryManager(retry=RetryPolicy(max_attempts=2, backoff=0.0,
+                                            fallback=False))
+    comps, _ = _serve(agent, stream, recovery=mgr, cluster=_TRAP_CLUSTER,
+                      world=_oom_trap_world())
+    assert comps[0].result.failed and comps[0].attempts == 2
+    assert mgr.stats.n_restarted == 1
+
+    # rung 2 — fallback replan: broadcast hints stripped, the blown
+    # (ci x mi) pair banned, leaves re-folded smallest-first -> recovered
+    mgr = RecoveryManager(retry=RetryPolicy(max_attempts=2, backoff=0.0))
+    comps, _ = _serve(agent, stream, recovery=mgr, cluster=_TRAP_CLUSTER,
+                      world=_oom_trap_world())
+    c = comps[0]
+    assert not c.result.failed and c.recovered and c.attempts == 2
+    assert mgr.stats.n_replanned == 1
+    assert c.finish_t - c.admit_t < 2.0    # vs the 60s timeout
+    # the replanned attempt's first join is NOT the banned fact-fact pair
+    first = c.result.stages[0].covered
+    assert first != frozenset({"ci", "mi"})
+
+
+# ---------------------------------------------------------------- hedging
+class _TinyPredictor:
+    def predict_query(self, query):
+        return 0.05
+
+
+def test_hedge_winner_emits_and_loser_is_cancelled_at_winner_finish():
+    q = mi_join_query()
+    agent = noop_agent_for(q, *[fast_query(i) for i in range(3)],
+                           max_steps=3)
+    stream = [Arrival(0.0, query=q, seed=5)] + \
+        [Arrival(0.01 * (i + 1), query=fast_query(i), seed=i + 1)
+         for i in range(3)]
+
+    # attempt 1 of seq 0 is a x40 straggler; the hedge (attempt keyed
+    # 1001) rolls clean dice and runs at full speed
+    def chaos():
+        return ScriptedFaults(slow={(0, 1): 40.0})
+
+    base, _ = _serve(agent, stream, n_lanes=3,
+                     recovery=RecoveryManager(injector=chaos()))
+    slow_finish = base[0].finish_t
+
+    mgr = RecoveryManager(injector=chaos(),
+                          hedge=HedgePolicy(factor=3.0,
+                                            predictor=_TinyPredictor()))
+    comps, sched = _serve(agent, stream, n_lanes=3, recovery=mgr)
+    c = comps[0]
+    assert c.hedged and not c.result.failed and c.attempts == 1
+    assert mgr.stats.n_hedges == 1 and mgr.stats.n_hedge_wins == 1
+    assert mgr.stats.n_hedge_cancelled == 1
+    assert c.finish_t < slow_finish        # the race actually helped
+    assert c.first_admit_t == 0.0          # latency priced from attempt 1
+    # honest pricing: the slow primary's lane was freed AT the winner's
+    # finish, not at the primary's own (later) finish
+    primary_lane = [l for l in sched.lanes if l.idx != c.lane]
+    assert all(l.free_at <= c.finish_t for l in primary_lane)
+    # fast traffic was never starved by the race
+    assert all(not comps[i].hedged for i in range(1, 4))
+
+
+def test_hedge_does_not_fire_without_an_idle_lane_or_under_prediction():
+    q = mi_join_query()
+    agent = noop_agent_for(q, max_steps=3)
+    stream = [Arrival(0.0, query=q, seed=5)]
+    # single lane: nowhere to hedge, the straggler just runs long
+    mgr = RecoveryManager(injector=ScriptedFaults(slow={(0, 1): 40.0}),
+                          hedge=HedgePolicy(factor=3.0,
+                                            predictor=_TinyPredictor()))
+    comps, _ = _serve(agent, stream, n_lanes=1, recovery=mgr)
+    assert mgr.stats.n_hedges == 0 and not comps[0].hedged
+    # two lanes but an accurate (large) prediction: no overrun observed
+    class Honest:
+        def predict_query(self, query):
+            return 1e4
+    mgr = RecoveryManager(injector=ScriptedFaults(slow={(0, 1): 40.0}),
+                          hedge=HedgePolicy(factor=3.0, predictor=Honest()))
+    comps, _ = _serve(agent, stream, n_lanes=2, recovery=mgr)
+    assert mgr.stats.n_hedges == 0
+
+
+# ---------------------------------------------------------------- breaker
+def test_breaker_trips_on_post_swap_failures_and_restores_incumbent(
+        tmp_path):
+    import jax
+    from repro.learn.policy_store import PolicyStore
+
+    qs = [fast_query(i) for i in range(6)]
+    from repro.sql.workloads import Workload
+    from repro.core.encoding import WorkloadMeta
+    from repro.core.agent import AgentConfig, AqoraAgent
+    wl = Workload(name="brk", max_tables=3, train=qs, test=[])
+    agent = AqoraAgent(WorkloadMeta.from_workload(wl),
+                       AgentConfig(max_steps=2), seed=0)
+
+    store = PolicyStore(tmp_path / "ps", probe=[], mode="gate")
+    store.commit(agent, 1)
+    incumbent = jax.tree_util.tree_map(np.array, agent.actor)
+
+    # post-swap sabotage: every query admitted after the swap dies on
+    # every stage -> failure-rate spike causally follows the swap
+    n = 16
+    faults = ScriptedFaults(stage={(s, 1, k): "transient"
+                                   for s in range(8, n) for k in range(6)})
+    brk = PolicyBreaker(store, agent, window=8, min_post=4, cooldown=5)
+    mgr = RecoveryManager(injector=faults, breaker=brk)
+    db, est = _world()
+    sched = LaneScheduler(db, est, agent, n_lanes=1, recovery=mgr)
+
+    def swapper(comp):
+        if comp.seq == 7 and store.serving_step == 1:
+            agent.actor = jax.tree_util.tree_map(lambda x: x + 1.0,
+                                                 agent.actor)
+            store.commit(agent, 2)
+    sched.on_complete.insert(0, swapper)
+
+    stream = [Arrival(0.3 * i, query=qs[i % 6], seed=i + 1)
+              for i in range(n)]
+    comps = sched.run(stream)
+    assert len(comps) == n
+    assert len(brk.trips) == 1
+    seq, bad_step, restored, reason = brk.trips[0]
+    assert (bad_step, restored) == (2, 1) and "failure rate" in reason
+    assert store.serving_step == 1
+    # the incumbent's parameters are restored EXACTLY (not approximately)
+    same = jax.tree_util.tree_map(
+        lambda a, b: bool(np.array_equal(np.array(a), np.array(b))),
+        incumbent, agent.actor)
+    assert all(jax.tree_util.tree_leaves(same))
+    # cooldown held the store in shadow mode, then restored gate mode
+    assert store.mode == "gate"
+
+
+def test_breaker_stays_quiet_without_a_regression(tmp_path):
+    from repro.core.agent import AgentConfig, AqoraAgent
+    from repro.core.encoding import WorkloadMeta
+    from repro.learn.policy_store import PolicyStore
+    from repro.sql.workloads import Workload
+
+    wl = Workload(name="quiet", max_tables=3,
+                  train=[fast_query(i) for i in range(4)], test=[])
+    agent = AqoraAgent(WorkloadMeta.from_workload(wl),
+                       AgentConfig(max_steps=2), seed=0)
+    store = PolicyStore(tmp_path / "ps", probe=[], mode="gate")
+    store.commit(agent, 1)
+    brk = PolicyBreaker(store, agent, window=8, min_post=4)
+    mgr = RecoveryManager(breaker=brk)
+    stream = [Arrival(0.2 * i, query=fast_query(i % 4), seed=i + 1)
+              for i in range(10)]
+    comps, _ = _serve(agent, stream, recovery=mgr, n_lanes=2)
+    assert len(comps) == 10 and not brk.trips
+    assert store.serving_step == 1 and store.mode == "gate"
+
+
+# ------------------------------------------------------- service + learn
+def test_service_stats_carry_the_failure_breakdown():
+    from repro.learn.harvest import TrajectoryHarvester
+    from repro.serve.service import QueryService
+
+    q = mi_join_query()
+    agent = noop_agent_for(q, *[fast_query(i) for i in range(4)],
+                           max_steps=2)
+    db, est = _world()
+    # seq 0 recovers after one transient; seq 2 crashes on every attempt
+    # and gives up at max_attempts=3
+    faults = ScriptedFaults(stage={(0, 1, 4): "transient", (2, 1, 0): "crash",
+                                   (2, 2, 0): "crash", (2, 3, 0): "crash"})
+    mgr = RecoveryManager(injector=faults,
+                          retry=RetryPolicy(max_attempts=3, backoff=0.0))
+    harv = TrajectoryHarvester()
+    svc = QueryService(db, agent, est=est, n_lanes=2, recovery=mgr,
+                       hooks=[harv])
+    stream = [Arrival(0.0, query=q, seed=5)] + \
+        [Arrival(0.05 * i, query=fast_query(i % 4), seed=i + 1)
+         for i in range(1, 5)]
+    comps, stats = svc.run(stream)
+
+    assert stats.n_completed == 5
+    assert stats.n_recovered == 1          # seq 0: transient, resumed
+    assert stats.n_retried == 2            # seqs 0 and 2
+    assert stats.attempts_total == 5 + 1 + 2
+    assert stats.failure_kinds == {"crash": 1}   # seq 2 gave up
+    assert stats.n_failed == 1
+
+    # the harvester sees each retried query ONCE — never duplicated
+    assert harv.n_seen == 5
+    assert len({e.seq for e in harv.replay.all()}) == \
+        len(harv.replay.all())
+
+
+def test_replay_experience_is_tagged_not_duplicated():
+    from repro.learn.harvest import TrajectoryHarvester
+    from repro.learn.replay import ReplayBuffer
+
+    q = mi_join_query()
+    agent = noop_agent_for(q, max_steps=2)
+    faults = ScriptedFaults(stage={(0, 1, 4): "transient"})
+    mgr = RecoveryManager(injector=faults,
+                          retry=RetryPolicy(max_attempts=2, backoff=0.0))
+    db, est = _world()
+    sched = LaneScheduler(db, est, agent, n_lanes=1, recovery=mgr)
+    rb = ReplayBuffer()
+    harv = TrajectoryHarvester(rb)
+    harv.attach(sched)
+    comps = sched.run([Arrival(0.0, query=q, seed=5)])
+    assert comps[0].attempts == 2 and comps[0].recovered
+    assert harv.n_seen == 1                # ONE completion for the query
+    if harv.n_harvested:                   # non-empty traj -> buffered once
+        exps = rb.all()
+        assert len(exps) == 1 and exps[0].attempts == 2
+        assert exps[0].recovered and harv.n_retried == 1
