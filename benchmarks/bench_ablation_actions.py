@@ -3,16 +3,18 @@
 escape from the syntactic plan family)."""
 import json
 
-from benchmarks.common import AQORA, csv_line
+from benchmarks.common import AQORA, bench_logger, csv_line
+
+log = bench_logger("ablation_actions")
 
 
 def main():
     p = AQORA / "ablations.json"
     if not p.exists():
-        print("bench_ablation_actions: missing results")
+        log.info("bench_ablation_actions: missing results")
         return False
     d = json.loads(p.read_text())
-    print("\n== §VII-D4: action-space subsets (ExtJOB) ==")
+    log.info("\n== §VII-D4: action-space subsets (ExtJOB) ==")
     for key, label in (("rl_ppo", "default: {cbo, lead, noop}"),
                        ("act_plus_broadcast", "+ broadcast hints"),
                        ("act_plus_swap", "+ swap"),
@@ -21,7 +23,7 @@ def main():
         if key not in d:
             continue
         r = d[key]
-        print(f"{label:30s} test C={r['total']:8.1f}s exec={r['exec']:8.1f}s "
+        log.info(f"{label:30s} test C={r['total']:8.1f}s exec={r['exec']:8.1f}s "
               f"fails={r['fails']}")
         csv_line(f"actions_{key}", 0, f"{r['total']:.1f}")
     return True

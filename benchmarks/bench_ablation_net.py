@@ -2,7 +2,9 @@
 optimization overhead (mean per-query plan time at evaluation), final cost."""
 import json
 
-from benchmarks.common import AQORA, csv_line
+from benchmarks.common import AQORA, bench_logger, csv_line
+
+log = bench_logger("ablation_net")
 
 
 def _params(net: str) -> int:
@@ -16,11 +18,11 @@ def _params(net: str) -> int:
 def main():
     p = AQORA / "ablations.json"
     if not p.exists():
-        print("bench_ablation_net: missing results")
+        log.info("bench_ablation_net: missing results")
         return False
     d = json.loads(p.read_text())
-    print("\n== Fig. 11(b)/Tab. III: decision-model architectures (ExtJOB) ==")
-    print(f"{'model':12s} {'params':>9s} {'opt overhead/query':>19s} "
+    log.info("\n== Fig. 11(b)/Tab. III: decision-model architectures (ExtJOB) ==")
+    log.info(f"{'model':12s} {'params':>9s} {'opt overhead/query':>19s} "
           f"{'test C (s)':>11s} {'fails':>5s}")
     for net, key in (("treecnn", "rl_ppo"), ("lstm", "net_lstm"),
                      ("fcnn", "net_fcnn"), ("queryformer", "net_queryformer")):
@@ -29,7 +31,7 @@ def main():
         r = d[key]
         n = len(r["per_query"])
         ovh = r["plan"] / max(n, 1)
-        print(f"{net:12s} {_params(net):9d} {ovh * 1000:16.0f} ms "
+        log.info(f"{net:12s} {_params(net):9d} {ovh * 1000:16.0f} ms "
               f"{r['total']:11.1f} {r['fails']:5d}")
         csv_line(f"tab3_{net}_overhead_ms", f"{ovh * 1e6:.0f}", f"{r['total']:.1f}")
     return True

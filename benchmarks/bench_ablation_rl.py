@@ -1,22 +1,24 @@
 """Paper Fig. 11(a): PPO vs DQN — training convergence + final test cost."""
 import json
 
-from benchmarks.common import AQORA, csv_line
+from benchmarks.common import AQORA, bench_logger, csv_line
+
+log = bench_logger("ablation_rl")
 
 
 def main():
     p = AQORA / "ablations.json"
     if not p.exists():
-        print("bench_ablation_rl: missing results")
+        log.info("bench_ablation_rl: missing results")
         return False
     d = json.loads(p.read_text())
-    print("\n== Fig. 11(a): PPO vs DQN on ExtJOB ==")
+    log.info("\n== Fig. 11(a): PPO vs DQN on ExtJOB ==")
     for k, label in (("rl_ppo", "AQORA (PPO)"), ("rl_dqn", "DQN variant")):
         if k not in d:
             continue
         r = d[k]
         curve = " ".join(f"{c:6.1f}" for c in r.get("curve", [])[:10])
-        print(f"{label:14s} test C={r['total']:8.1f}s fails={r['fails']}  "
+        log.info(f"{label:14s} test C={r['total']:8.1f}s fails={r['fails']}  "
               f"train-latency curve (30-ep means): {curve}")
     if "rl_ppo" in d and "rl_dqn" in d:
         csv_line("fig11a_ppo_vs_dqn", 0,

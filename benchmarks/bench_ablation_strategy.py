@@ -2,16 +2,18 @@
 3-step limit) vs no-step-limit vs no-curriculum."""
 import json
 
-from benchmarks.common import AQORA, csv_line
+from benchmarks.common import AQORA, bench_logger, csv_line
+
+log = bench_logger("ablation_strategy")
 
 
 def main():
     p = AQORA / "ablations.json"
     if not p.exists():
-        print("bench_ablation_strategy: missing results")
+        log.info("bench_ablation_strategy: missing results")
         return False
     d = json.loads(p.read_text())
-    print("\n== Fig. 11(c): learning strategies (ExtJOB) ==")
+    log.info("\n== Fig. 11(c): learning strategies (ExtJOB) ==")
     for key, label in (("rl_ppo", "default (curriculum + step limit 3)"),
                        ("strat_no_step_limit", "no step limit (8 steps)"),
                        ("strat_no_curriculum", "no curriculum (full space)")):
@@ -19,7 +21,7 @@ def main():
             continue
         r = d[key]
         fails_curve = r.get("train_fail_curve", [])
-        print(f"{label:38s} test C={r['total']:8.1f}s fails={r['fails']} "
+        log.info(f"{label:38s} test C={r['total']:8.1f}s fails={r['fails']} "
               f"train-failure curve: {fails_curve[:10]}")
         csv_line(f"fig11c_{key}", 0, f"{r['total']:.1f}")
     return True

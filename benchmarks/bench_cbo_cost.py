@@ -2,17 +2,19 @@
 grows (the DP blowup that motivates adaptive re-optimization)."""
 import json
 
-from benchmarks.common import AQORA, csv_line
+from benchmarks.common import AQORA, bench_logger, csv_line
+
+log = bench_logger("cbo_cost")
 
 
 def main():
     p = AQORA / "ablations.json"
     if not p.exists() or "cbo_cost" not in json.loads(p.read_text()):
-        print("bench_cbo_cost: missing results")
+        log.info("bench_cbo_cost: missing results")
         return False
     rows = json.loads(p.read_text())["cbo_cost"]
-    print("\n== Fig. 3: CBO planning vs execution time by join count ==")
-    print(f"{'relations':>9s} {'C_plan (s)':>11s} {'exec no-CBO':>12s} "
+    log.info("\n== Fig. 3: CBO planning vs execution time by join count ==")
+    log.info(f"{'relations':>9s} {'C_plan (s)':>11s} {'exec no-CBO':>12s} "
           f"{'exec CBO':>9s}")
     by_n = {}
     for r in rows:
@@ -22,7 +24,7 @@ def main():
         tp = sum(r["plan_time"] for r in g) / len(g)
         e0 = sum(r["exec_no_cbo"] for r in g) / len(g)
         e1 = sum(r["exec_cbo"] for r in g) / len(g)
-        print(f"{n:9d} {tp:11.3f} {e0:12.1f} {e1:9.1f}")
+        log.info(f"{n:9d} {tp:11.3f} {e0:12.1f} {e1:9.1f}")
     big = max(by_n)
     small = min(by_n)
     ratio = (sum(r['plan_time'] for r in by_n[big]) /

@@ -1,7 +1,9 @@
 """Paper Tab. II: improvement/regression distribution of each learned
 method vs Spark default — delta = (C_spark - C_method)/C_spark bucketed
 into (0,0.2), (0.2,inf), (-0.2,0), (-inf,-0.2) — plus the failure row."""
-from benchmarks.common import METHODS, csv_line, load
+from benchmarks.common import METHODS, bench_logger, csv_line, load
+
+log = bench_logger("delta_table")
 
 BUCKETS = (("(0.2,+inf)", lambda d: d > 0.2),
            ("(0,0.2)", lambda d: 0 < d <= 0.2),
@@ -10,7 +12,7 @@ BUCKETS = (("(0.2,+inf)", lambda d: d > 0.2),
 
 
 def main():
-    print("\n== Tab. II: per-query delta vs Spark default ==")
+    log.info("\n== Tab. II: per-query delta vs Spark default ==")
     any_ok = False
     for bench in ("job", "extjob", "stack"):
         d = load(bench)
@@ -20,8 +22,8 @@ def main():
         sp = {r["query"]: r["total"] for r in d["spark"]}
         sp_fail = sum(r["failed"] for r in d["spark"])
         n = len(d["spark"])
-        print(f"\n[{bench}] (spark failures: {sp_fail}/{n} = {sp_fail/n:.1%})")
-        print(f"  {'delta bucket':14s} " + " ".join(f"{m:>10s}" for m in METHODS[1:]))
+        log.info(f"\n[{bench}] (spark failures: {sp_fail}/{n} = {sp_fail/n:.1%})")
+        log.info(f"  {'delta bucket':14s} " + " ".join(f"{m:>10s}" for m in METHODS[1:]))
         rows = {m: {r['query']: r for r in d[m]} for m in METHODS[1:]}
         for bname, pred in BUCKETS:
             counts = []
@@ -29,9 +31,9 @@ def main():
                 c = sum(1 for q in sp
                         if pred((sp[q] - rows[m][q]["total"]) / max(sp[q], 1e-9)))
                 counts.append(c)
-            print(f"  {bname:14s} " + " ".join(f"{c:10d}" for c in counts))
+            log.info(f"  {bname:14s} " + " ".join(f"{c:10d}" for c in counts))
         fails = [sum(r["failed"] for r in d[m]) for m in METHODS[1:]]
-        print(f"  {'Failure':14s} " + " ".join(f"{c:10d}" for c in fails))
+        log.info(f"  {'Failure':14s} " + " ".join(f"{c:10d}" for c in fails))
         csv_line(f"tab2_{bench}_aqora_failures", 0, fails[-1])
     return any_ok
 

@@ -46,7 +46,10 @@ import time
 
 import numpy as np
 
-from benchmarks.common import bench_args, csv_line, emit_bench_json
+from benchmarks.common import (bench_args, bench_logger, csv_line,
+                               emit_bench_json)
+
+log = bench_logger("drift")
 
 SLO = 10.0                      # per-query deadline (virtual seconds)
 TIMEOUT = 45.0                  # shortened so failures complete mid-stream
@@ -264,7 +267,7 @@ def main(argv=None):
     n_traps = sum(a.query is not None and
                   a.query.name.startswith("statstrap") for a in stream)
     n_deltas = sum(a.delta is not None for a in stream)
-    print(f"== drift control plane: {n_queries} queries ({n_traps} stats-"
+    log.info(f"== drift control plane: {n_queries} queries ({n_traps} stats-"
           f"trap), {n_deltas} deltas (movie_info x{GROWTH_X + 1} at query "
           f"{drift_at}), {args.lanes} lanes, SLO {SLO:.0f}s, timeout "
           f"{TIMEOUT:.0f}s ==")
@@ -287,7 +290,7 @@ def main(argv=None):
                                   n_queries)
             comps_by_arm[name] = comps
             m = arms[name]
-            print(f"{name:19s} p99={m['p99']:6.2f}s post-p99="
+            log.info(f"{name:19s} p99={m['p99']:6.2f}s post-p99="
                   f"{m['post_drift_p99']:6.2f}s fails={m['failed']:3d} "
                   f"miss={m['slo_miss_rate']:.2f} rej={m['rejected']:3d} "
                   f"goodput={m['goodput']:.2f} reANALYZE="
@@ -318,7 +321,7 @@ def main(argv=None):
         [c.finish_t for c in base] == [c.finish_t for c in pr4_comps] and
         [c.traj.actions for c in base] ==
         [c.traj.actions for c in pr4_comps])
-    print(f"never+oneshot == PR-4 path (no control plane): "
+    log.info(f"never+oneshot == PR-4 path (no control plane): "
           f"{never_identical}")
 
     # ------------------------------------------------------------- gates
@@ -336,7 +339,7 @@ def main(argv=None):
     ok = bool(never_identical) if args.smoke else bool(
         trap_armed and refresh_fixes and budget_cheaper and
         adaptation_helps and never_identical)
-    print(f"gates: trap_armed={trap_armed} refresh_fixes={refresh_fixes} "
+    log.info(f"gates: trap_armed={trap_armed} refresh_fixes={refresh_fixes} "
           f"budget_cheaper={budget_cheaper} "
           f"adaptation_helps={adaptation_helps} "
           f"never_identical={never_identical} -> ok={ok}")

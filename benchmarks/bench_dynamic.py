@@ -3,33 +3,35 @@ snapshots, test on the full database with STALE statistics; (row 2)
 cross-workload transfer JOB<->ExtJOB."""
 import json
 
-from benchmarks.common import AQORA, csv_line
+from benchmarks.common import AQORA, bench_logger, csv_line
+
+log = bench_logger("dynamic")
 
 
 def main():
     p = AQORA / "ablations.json"
     if not p.exists():
-        print("bench_dynamic: missing results (run repro.experiments.ablations)")
+        log.info("bench_dynamic: missing results (run repro.experiments.ablations)")
         return False
     d = json.loads(p.read_text())
-    print("\n== Fig. 9 row 1: data evolution (train old snapshot -> test full) ==")
+    log.info("\n== Fig. 9 row 1: data evolution (train old snapshot -> test full) ==")
     for year in (1950, 1980):
         k = f"dyn_imdb{year}"
         if k not in d:
             continue
         r = d[k]
-        print(f"IMDb-{year}: spark C={r['spark']['total']:8.1f}s "
+        log.info(f"IMDb-{year}: spark C={r['spark']['total']:8.1f}s "
               f"(fails {r['spark']['fails']}) | lero C={r['lero']['total']:8.1f}s "
               f"(fails {r['lero']['fails']}) | aqora C={r['aqora']['total']:8.1f}s "
               f"(fails {r['aqora']['fails']})")
         csv_line(f"fig9_imdb{year}_aqora_over_spark", 0,
                  f"{(r['spark']['total'] - r['aqora']['total']) / r['spark']['total']:.3f}")
-    print("\n== Fig. 9 row 2: cross-workload transfer ==")
+    log.info("\n== Fig. 9 row 2: cross-workload transfer ==")
     for k, label in (("dyn_job_to_extjob", "train JOB -> test ExtJOB"),
                      ("dyn_extjob_to_job", "train ExtJOB -> test JOB")):
         if k in d:
             r = d[k]
-            print(f"{label}: C={r['total']:8.1f}s exec={r['exec']:8.1f}s "
+            log.info(f"{label}: C={r['total']:8.1f}s exec={r['exec']:8.1f}s "
                   f"fails={r['fails']}")
             csv_line(f"fig9_{k}", 0, f"{r['total']:.1f}")
     return True

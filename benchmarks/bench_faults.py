@@ -54,7 +54,10 @@ import time
 
 import numpy as np
 
-from benchmarks.common import bench_args, csv_line, emit_bench_json
+from benchmarks.common import (bench_args, bench_logger, csv_line,
+                               emit_bench_json)
+
+log = bench_logger("faults")
 
 SLO = 30.0                     # per-query deadline (virtual seconds)
 TIMEOUT = 60.0                 # shortened so failures complete mid-stream
@@ -348,7 +351,7 @@ def main(argv=None):
                      drift_at=drift_at)
     n_traps = sum(a.query is not None and
                   a.query.name.startswith("statstrap") for a in stream)
-    print(f"== failure recovery: {n_queries} queries ({n_traps} stats-trap,"
+    log.info(f"== failure recovery: {n_queries} queries ({n_traps} stats-trap,"
           f" OOM post-drift), chaos seed {CHAOS_SEED} "
           f"(crash {P_CRASH}/stage, transient {P_TRANSIENT}/stage, "
           f"slow {P_SLOW}/run x{SLOW_FACTOR[0]:.0f}-{SLOW_FACTOR[1]:.0f}, "
@@ -368,14 +371,14 @@ def main(argv=None):
         m = arms[arm]
         kinds = ",".join(f"{k}:{v}" for k, v in
                          sorted(m["failure_kinds"].items())) or "-"
-        print(f"{arm:7s} p50={m['p50']:6.2f}s p99={m['p99']:6.2f}s "
+        log.info(f"{arm:7s} p50={m['p50']:6.2f}s p99={m['p99']:6.2f}s "
               f"goodput={m['goodput']:.2f} failed={m['failed']:3d} "
               f"[{kinds}] retried={m['n_retried']:3d} "
               f"recovered={m['n_recovered']:3d} hedged={m['n_hedged']:2d}")
 
     breaker, breaker_heals = _breaker_demo(meta, wl,
                                            n_lanes=args.lanes)
-    print(f"breaker: trips={len(breaker['trips'])} "
+    log.info(f"breaker: trips={len(breaker['trips'])} "
           f"bad-swap failures without={breaker['failed_without_breaker']} "
           f"with={breaker['failed_with_breaker']} "
           f"(pre-swap={breaker['pre_swap_failed']}, "
@@ -397,7 +400,7 @@ def main(argv=None):
     ok = bool(fallback_rescues and breaker_heals) if args.smoke else bool(
         full_beats_none and full_beats_blind and fallback_rescues
         and breaker_heals)
-    print(f"gates: full_beats_none={full_beats_none} "
+    log.info(f"gates: full_beats_none={full_beats_none} "
           f"full_beats_blind={full_beats_blind} "
           f"fallback_rescues={fallback_rescues} "
           f"breaker_heals={breaker_heals} -> ok={ok}")

@@ -8,7 +8,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_line, update_bench_json
+from benchmarks.common import bench_logger, csv_line, update_bench_json
+
+log = bench_logger("kernels")
 
 
 def _time(fn, *args, iters=5):
@@ -29,8 +31,8 @@ def main():
     v = jnp.asarray(rng.standard_normal((8, 512, 64)), jnp.float32)
     fa = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v))
     us = _time(fa, q, k, v)
-    print(f"\n== kernel reference microbenchmarks (CPU) ==")
-    print(f"attention_ref 8x512x64:   {us:10.0f} us/call")
+    log.info(f"\n== kernel reference microbenchmarks (CPU) ==")
+    log.info(f"attention_ref 8x512x64:   {us:10.0f} us/call")
     csv_line("attention_ref_8x512x64", f"{us:.0f}", "oracle")
 
     x = jnp.asarray(rng.standard_normal((2, 256, 64)), jnp.float32)
@@ -40,7 +42,7 @@ def main():
     Cs = jnp.asarray(rng.standard_normal((2, 256, 16)), jnp.float32)
     ms = jax.jit(lambda *a: mamba_scan_ref(*a)[0])
     us = _time(ms, x, dt, A, Bs, Cs)
-    print(f"mamba_scan_ref 2x256x64:  {us:10.0f} us/call")
+    log.info(f"mamba_scan_ref 2x256x64:  {us:10.0f} us/call")
     csv_line("mamba_scan_ref_2x256x64", f"{us:.0f}", "oracle")
 
     # TreeCNN inference latency (the per-stage decision cost, Tab. III)
@@ -57,7 +59,7 @@ def main():
     for _ in range(20):
         agent.policy_probs((feat, li, ri, mask), np.ones(agent.space.d, np.float32))
     us = (time.perf_counter() - t0) / 20 * 1e6
-    print(f"treecnn policy inference: {us:10.0f} us/call "
+    log.info(f"treecnn policy inference: {us:10.0f} us/call "
           f"(paper Tab. III: 317 ms/query incl. engine round-trips)")
     csv_line("treecnn_policy_inference", f"{us:.0f}", "per-stage decision")
 
@@ -76,13 +78,13 @@ def main():
     params = agent.actor["enc"]
     unfused = jax.jit(lambda *a: nets.apply_encoder(params, "treecnn", *a))
     us_unfused = _time(unfused, tfeat, tleft, tright, tmask)
-    print(f"treecnn batch-8 unfused:  {us_unfused:10.0f} us/call (jnp vmap)")
+    log.info(f"treecnn batch-8 unfused:  {us_unfused:10.0f} us/call (jnp vmap)")
     csv_line("treecnn_b8_unfused", f"{us_unfused:.0f}", "vmap reference")
     on_tpu = jax.default_backend() == "tpu"
     us_fused = _time(lambda *a: tree_cnn_fused(*a, params), tfeat, tleft,
                      tright, tmask, iters=5 if on_tpu else 1)
     mode = "pallas" if on_tpu else "pallas-interpret"
-    print(f"treecnn batch-8 fused:    {us_fused:10.0f} us/call ({mode})")
+    log.info(f"treecnn batch-8 fused:    {us_fused:10.0f} us/call ({mode})")
     csv_line("treecnn_b8_fused", f"{us_fused:.0f}", mode)
     update_bench_json({"treecnn_b8_unfused_us": round(us_unfused, 1),
                        "treecnn_b8_fused_us": round(us_fused, 1),

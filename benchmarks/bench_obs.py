@@ -1,0 +1,220 @@
+"""Observability benchmark: prices the tracer and demos the explainer —
+feeds results/BENCH_obs.json.
+
+Segment A (overhead): bench_serve's straggler-heavy mix replayed twice
+through the SAME service configuration — obs off, then obs on with a
+full `Tracer` (span trees + metrics sampling + flight recorder). The
+virtual-clock completions must be BIT-IDENTICAL (the tracer only
+observes; every emit point short-circuits to the untraced code path on
+the off run), so the host-seconds delta is pure tracing cost, reported
+as a percent and as microseconds per query.
+
+Segment B (explainer): bench_faults' seeded chaos storm served through
+its "none" (faults fire, nothing recovers) and "full" (retry ladder +
+hedges) recovery arms, each with a tracer attached. The trace-diff
+explainer aligns the two runs by stream seq and attributes the p99 gap
+to phases (queue / execute / retry / hedge). Gate: the per-phase deltas
+sum EXACTLY to the p99 delta, and that delta matches the independently
+computed np.percentile gap. The full arm's trace is also exported to
+JSONL and schema-validated end to end.
+
+  PYTHONPATH=src python -m benchmarks.bench_obs [--smoke]
+"""
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import (ROOT, bench_args, bench_logger, csv_line,
+                               emit_bench_json)
+
+log = bench_logger("obs")
+
+
+def _sig(comps):
+    """Completion identity tuple: any tracing side effect on scheduling,
+    executor charging or recovery shows up here."""
+    return [(c.seq, c.admit_t, c.finish_t, c.lane, c.attempts,
+             bool(c.result.failed)) for c in comps]
+
+
+# ------------------------------------------------------------ segment A
+def bench_overhead(args):
+    from repro.serve.obs import Tracer
+    from repro.serve.service import QueryService
+    from benchmarks.bench_serve import STRAG_EVERY, _build, _mix_stream
+
+    scale = 0.04 if args.smoke else 0.1
+    n_queries = 24 if args.smoke else 96
+    rate = 4.0
+    reps = 1 if args.smoke else 3
+
+    db, wl, est, agent = _build(scale)
+    # warm the jit caches so host timings reflect steady state
+    QueryService(db, agent, est=est, n_lanes=args.lanes).run_queries(
+        wl.train[:args.lanes])
+
+    log.info(f"\n== obs overhead: {n_queries} queries "
+             f"(1 straggler per {STRAG_EVERY}), {args.lanes} lanes, "
+             f"best of {reps} ==")
+    host = {}
+    sigs = {}
+    tracer = None
+    for mode in ("off", "on"):
+        best = float("inf")
+        for _ in range(reps):
+            obs = Tracer() if mode == "on" else None
+            stream = _mix_stream(wl, n_queries, rate, seed=11)
+            svc = QueryService(db, agent, est=est, n_lanes=args.lanes,
+                               obs=obs)
+            t0 = time.perf_counter()
+            comps, _ = svc.run(stream)
+            best = min(best, time.perf_counter() - t0)
+        host[mode] = best
+        sigs[mode] = _sig(comps)
+        if mode == "on":
+            tracer = obs
+
+    identical = sigs["off"] == sigs["on"]
+    delta = host["on"] - host["off"]
+    pct = 100.0 * delta / max(host["off"], 1e-9)
+    us_q = 1e6 * delta / n_queries
+    snap = tracer.metrics.snapshot()
+    out = {
+        "scale": scale, "n_queries": n_queries, "rate_qps": rate,
+        "reps": reps,
+        "host_off_s": round(host["off"], 4),
+        "host_on_s": round(host["on"], 4),
+        "overhead_pct": round(pct, 2),
+        "us_per_query": round(us_q, 1),
+        "n_spans": len(tracer.spans),
+        "n_events": len(tracer.events),
+        "n_metric_samples": snap["n_samples"],
+        "completions_identical": identical,
+    }
+    log.info(f"off={host['off']:.3f}s on={host['on']:.3f}s "
+             f"overhead={pct:+.1f}% ({us_q:+.0f}us/query)  "
+             f"spans={out['n_spans']} events={out['n_events']} "
+             f"samples={out['n_metric_samples']}  "
+             f"completions bit-identical: "
+             f"{'OK' if identical else 'MISMATCH'}")
+    return out, identical
+
+
+# ------------------------------------------------------------ segment B
+def bench_explainer(args):
+    from repro.baselines import CboReplanAgent
+    from repro.core.encoding import WorkloadMeta
+    from repro.serve.obs import Tracer
+    from repro.serve.obs.explain import (diff_profiles, format_diff,
+                                         run_profile)
+    from repro.serve.obs.export import (validate_trace_jsonl,
+                                        write_trace_jsonl)
+    from repro.serve.service import QueryService
+    from repro.sql import workloads
+    from benchmarks.bench_faults import (CHAOS_SEED, _build_world, _cluster,
+                                         _hedge_predictor, _recovery,
+                                         _stream)
+
+    scale = 0.06 if args.smoke else 0.2
+    n_queries = 40 if args.smoke else 150
+    drift_at = 10 if args.smoke else 25
+    cap = 1_500_000 if args.smoke else None
+
+    wl = workloads.make_workload("job", n_train=48, n_test_per_template=1,
+                                 seed=7)
+    meta = WorkloadMeta.from_workload(wl)
+    db0, _ = _build_world(scale)
+    stream = _stream(wl, db0, n_queries=n_queries, rate=1.0, seed=31,
+                     drift_at=drift_at)
+    log.info(f"\n== obs explainer: bench_faults chaos storm "
+             f"(seed {CHAOS_SEED}), {n_queries} queries, {args.lanes} "
+             f"lanes, arms none vs full ==")
+    predictor = _hedge_predictor(meta, stream, scale=scale, cap=cap,
+                                 n_lanes=args.lanes, smoke=args.smoke)
+
+    profiles, p99, tracers = {}, {}, {}
+    for arm in ("none", "full"):
+        # bench_faults._serve_arm, plus a tracer on the service
+        db, est = _build_world(scale)
+        tracer = Tracer()
+        svc = QueryService(db, CboReplanAgent(meta, max_steps=3), est=est,
+                           n_lanes=args.lanes, cluster=_cluster(cap=cap),
+                           recovery=_recovery(arm, predictor), obs=tracer)
+        comps, _ = svc.run(stream)
+        profiles[arm] = run_profile(tracer)
+        p99[arm] = float(np.percentile([c.latency for c in comps], 99))
+        tracers[arm] = tracer
+
+    diff = diff_profiles(profiles["none"], profiles["full"],
+                         label_a="none", label_b="full", q=99.0)
+    log.info(format_diff(diff))
+
+    # the attribution gates: phase deltas sum exactly to the explainer's
+    # p99 delta, and that delta IS the observed np.percentile gap
+    phase_sum = sum(diff["pq"]["phases"].values())
+    exact = abs(phase_sum - diff["pq"]["delta"]) < 1e-9
+    observed_gap = p99["full"] - p99["none"]
+    matches = abs(diff["pq"]["delta"] - observed_gap) < 1e-6
+    log.info(f"p99 gap: observed {observed_gap:+.3f}s, attributed "
+             f"{phase_sum:+.3f}s -> exact_sum={exact} "
+             f"matches_observed={matches}")
+
+    # export the full arm's trace and validate the schema end to end
+    out_dir = ROOT / "results"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    jsonl = str(out_dir / "trace_faults_full.jsonl")
+    write_trace_jsonl(tracers["full"], jsonl)
+    errors = validate_trace_jsonl(jsonl)
+    n_lines = sum(1 for _ in open(jsonl))
+    log.info(f"exported {jsonl} ({n_lines} lines) -> "
+             f"{len(errors)} schema errors")
+    for e in errors[:5]:
+        log.info(f"  {e}")
+
+    n_dumps = len(tracers["none"].flight.dumps)
+    out = {
+        "scale": scale, "n_queries": n_queries, "drift_at": drift_at,
+        "chaos_seed": CHAOS_SEED,
+        "p99_none": p99["none"], "p99_full": p99["full"],
+        "observed_p99_gap": observed_gap,
+        "attributed_p99_gap": phase_sum,
+        "diff": diff,
+        "n_events_none": len(tracers["none"].events),
+        "n_events_full": len(tracers["full"].events),
+        "n_flight_dumps_none": n_dumps,
+        "export": {"path": str(pathlib.Path(jsonl).relative_to(ROOT)),
+                   "n_lines": n_lines, "n_errors": len(errors)},
+    }
+    ok = exact and matches and not errors
+    return out, {"attribution_exact": exact,
+                 "attribution_matches_observed": matches,
+                 "export_valid": not errors, "ok": ok}
+
+
+# ----------------------------------------------------------------- main
+def main(argv=None):
+    args = bench_args(argv, lanes=6)
+    overhead, identical = bench_overhead(args)
+    explainer, gates = bench_explainer(args)
+
+    ok = bool(identical and gates["ok"])
+    log.info(f"gates: completions_identical={identical} "
+             f"attribution_exact={gates['attribution_exact']} "
+             f"matches_observed={gates['attribution_matches_observed']} "
+             f"export_valid={gates['export_valid']} -> ok={ok}")
+
+    csv_line("obs_overhead_pct", 0, overhead["overhead_pct"])
+    csv_line("obs_us_per_query", 0, overhead["us_per_query"])
+    csv_line("obs_p99_gap_attributed_s",
+             0, round(explainer["attributed_p99_gap"], 3))
+    emit_bench_json({
+        "smoke": args.smoke, "n_lanes": args.lanes,
+        "overhead": overhead, "explainer": explainer,
+        "gates": {"completions_identical": identical, **gates, "ok": ok},
+    }, name="BENCH_obs.json")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if main() else 1)

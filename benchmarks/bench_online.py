@@ -42,7 +42,10 @@ import time
 
 import numpy as np
 
-from benchmarks.common import bench_args, csv_line, emit_bench_json
+from benchmarks.common import (bench_args, bench_logger, csv_line,
+                               emit_bench_json)
+
+log = bench_logger("online")
 
 
 # ------------------------------------------------------------ workload
@@ -157,7 +160,7 @@ def main(argv=None):
                              seed=17, drift_at=drift_at, growth=growth,
                              churn_every=churn_every)
     n_deltas = sum(a.delta is not None for a in stream)
-    print(f"== online learning under drift: {n_queries} queries "
+    log.info(f"== online learning under drift: {n_queries} queries "
           f"({sum(q.query is not None and q.query.name.startswith('trap') for q in stream)} trap), "
           f"{n_deltas} deltas, {args.lanes} lanes, open-loop {rate} qps ==")
 
@@ -194,7 +197,7 @@ def main(argv=None):
     h, l = loop_hooks("gate", AdaptiveCurriculum(window=8, min_dwell=8))
     _serve(db, est, serving_agent, stream, n_lanes=args.lanes,
            explore=True, hooks=[h, l])
-    print("warmup pass done (jit caches hot)")
+    log.info("warmup pass done (jit caches hot)")
 
     # -- frozen: the PR-2 serving configuration
     reset_agents()
@@ -245,7 +248,7 @@ def main(argv=None):
             "serve_path_host_seconds": round(serve_host, 2),
             "host_qps": round(len(comps) / host, 3),
         }
-        print(f"{name:7s} p50={p50:7.2f}s p99={p99:7.2f}s | post-drift "
+        log.info(f"{name:7s} p50={p50:7.2f}s p99={p99:7.2f}s | post-drift "
               f"p50={dp50:7.2f}s p99={dp99:7.2f}s | fails={n_failed:3d} "
               f"host={host:6.1f}s (learn {learn_host:5.1f}s, serve-path "
               f"{serve_host:5.1f}s)")
@@ -260,12 +263,12 @@ def main(argv=None):
     serve_ratio = rows["frozen"]["serve_path_host_seconds"] / \
         max(rows["shadow"]["serve_path_host_seconds"], 1e-9)
     raw_ratio = rows["shadow"]["host_qps"] / rows["frozen"]["host_qps"]
-    print(f"shadow==frozen completions: {shadow_identical};  qps ratio "
+    log.info(f"shadow==frozen completions: {shadow_identical};  qps ratio "
           f"{qps_ratio:.3f};  serve-path host ratio {serve_ratio:.3f};  "
           f"raw host-qps ratio {raw_ratio:.3f}")
-    print(f"online learner: {on_l.stats.as_dict()}")
-    print(f"online store:   {on_l.store.stats()}")
-    print(f"curriculum:     {on_l.curriculum.stats()}")
+    log.info(f"online learner: {on_l.stats.as_dict()}")
+    log.info(f"online store:   {on_l.store.stats()}")
+    log.info(f"curriculum:     {on_l.curriculum.stats()}")
 
     ok_tail = (rows["online"]["post_drift_p99"] <
                rows["frozen"]["post_drift_p99"]) and \

@@ -40,7 +40,10 @@ import numpy as np
 
 from benchmarks.bench_serve import STRAG_EVERY, _build, _straggler, \
     fast_subset
-from benchmarks.common import bench_args, csv_line, emit_bench_json
+from benchmarks.common import (bench_args, bench_logger, csv_line,
+                               emit_bench_json)
+
+log = bench_logger("qos")
 
 SLO_INT = 40.0                  # interactive deadline (virtual seconds)
 SLO_ANL = 400.0                 # analytics deadline
@@ -80,7 +83,7 @@ def _fit_predictor(agent, wl, *, scale, smoke):
                                     batch_size=16, epochs=3)
     p_strag = pred.predict_query(strag)
     p_fast = pred.predict_query(fast[0])
-    print(f"predictor: {harv.n_harvested} harvested trajectories, final "
+    log.info(f"predictor: {harv.n_harvested} harvested trajectories, final "
           f"loss {loss:.3f}; straggler->{p_strag:.0f}s fast->{p_fast:.1f}s")
     return pred, p_strag, p_fast
 
@@ -139,7 +142,7 @@ def bench_slo(wl, agent, pred, *, scale, n_lanes, smoke):
     # n_lanes leaves plain async with no free lane for the tail
     n_inter, n_anl, n_rep = (48, 12, 2) if smoke else (96, 24, 3)
     n_queries = n_inter + n_anl + n_rep
-    print(f"\n== QoS: SLO misses under overload ({n_inter}+{n_anl}+{n_rep} "
+    log.info(f"\n== QoS: SLO misses under overload ({n_inter}+{n_anl}+{n_rep} "
           f"queries, 1 straggler per {STRAG_EVERY} interactive, {n_lanes} "
           f"lanes, SLOs {SLO_INT:.0f}/{SLO_ANL:.0f}/{SLO_REP:.0f}s) ==")
     out, comps_by_mode = {}, {}
@@ -166,7 +169,7 @@ def bench_slo(wl, agent, pred, *, scale, n_lanes, smoke):
         o["hook_seconds"] = stats.hook_seconds
         out[mode] = o
         comps_by_mode[mode] = comps
-        print(f"{mode:8s} miss_rate={o['slo_miss_rate']:.2f} "
+        log.info(f"{mode:8s} miss_rate={o['slo_miss_rate']:.2f} "
               f"goodput={o['goodput']:.2f} rejected={o['rejected']:3d} "
               f"degraded={o['degraded']:3d} "
               f"queue_wait={o['queue_wait_mean']:7.2f}s host={host:.1f}s")
@@ -225,7 +228,7 @@ def bench_isolation(agent, *, scale, n_lanes, smoke):
     ws = svc.cache.bytes
     vic_budget = 2 * ws
     flood_budget = max(ws // 2, 64 * 1024)
-    print(f"\n== QoS: noisy-neighbor cache isolation (victim working set "
+    log.info(f"\n== QoS: noisy-neighbor cache isolation (victim working set "
           f"{ws / 1e3:.0f} KB / {len(sigs)} entries; budgets "
           f"victim={vic_budget / 1e3:.0f} KB flood={flood_budget / 1e3:.0f} "
           f"KB; {n_flood} distinct flood queries) ==")
@@ -272,10 +275,10 @@ def bench_isolation(agent, *, scale, n_lanes, smoke):
             "cross_tenant_evictions": vic_part.stats.evictions},
         "shared": {"cache": stats_s.cache, "victim_resident": res_s},
     }
-    print(f"partitioned: victim evictions={vic_part.stats.evictions} "
+    log.info(f"partitioned: victim evictions={vic_part.stats.evictions} "
           f"hit_rate={vic_part.stats.hit_rate:.2f} resident="
           f"{res_p}/{len(sigs)}; flood evictions={flood_part.stats.evictions}")
-    print(f"shared:      victim resident={res_s}/{len(sigs)} "
+    log.info(f"shared:      victim resident={res_s}/{len(sigs)} "
           f"(flood evicted {len(sigs) - res_s}) "
           f"total evictions={stats_s.cache['evictions']}")
     ok = vic_part.stats.evictions == 0 and res_p == len(sigs) \
@@ -291,7 +294,7 @@ def bench_qos_off_identical(wl, agent, *, scale, n_lanes, smoke):
 
     n_inter, n_anl = (16, 6) if smoke else (32, 12)
     n = n_inter + n_anl
-    print(f"\n== QoS disabled == plain async: bit-identity ({n} queries) ==")
+    log.info(f"\n== QoS disabled == plain async: bit-identity ({n} queries) ==")
 
     def serve(**kw):
         db = datagen.make_job_like(scale=scale, seed=0)
@@ -307,7 +310,7 @@ def bench_qos_off_identical(wl, agent, *, scale, n_lanes, smoke):
         [c.finish_t for c in plain] == [c.finish_t for c in off] and
         [c.traj.actions for c in plain] == [c.traj.actions for c in off] and
         [c.lane for c in plain] == [c.lane for c in off])
-    print(f"qos-off completions identical to plain async: {identical}")
+    log.info(f"qos-off completions identical to plain async: {identical}")
     return identical
 
 
@@ -343,7 +346,7 @@ def main(argv=None):
         for t in q["p50_non_degraded"])
     ok = bool(overloaded and qos_wins and p50_ok and iso_ok and identical)
 
-    print(f"\nasync miss_rate={a['slo_miss_rate']:.2f} -> edf+qos "
+    log.info(f"\nasync miss_rate={a['slo_miss_rate']:.2f} -> edf+qos "
           f"{q['slo_miss_rate']:.2f}; goodput {a['goodput']:.2f} -> "
           f"{q['goodput']:.2f}; overloaded={overloaded} p50_ok={p50_ok} "
           f"isolation_ok={iso_ok} qos_off_identical={identical}")

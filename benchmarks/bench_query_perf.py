@@ -5,25 +5,27 @@ proportion) — plus the batched-rollout-engine throughput benchmark
 results/BENCH_rollout.json so the perf trajectory is tracked per PR."""
 import time
 
-from benchmarks.common import (METHODS, csv_line, load, totals,
+from benchmarks.common import (METHODS, bench_logger, csv_line, load, totals,
                                update_bench_json)
+log = bench_logger("query_perf")
+
 
 
 def fig7():
-    print("\n== Fig. 7: query performance on three benchmarks (seconds) ==")
-    print(f"{'bench':8s} {'method':10s} {'C (e2e)':>10s} {'C_exec':>10s} "
+    log.info("\n== Fig. 7: query performance on three benchmarks (seconds) ==")
+    log.info(f"{'bench':8s} {'method':10s} {'C (e2e)':>10s} {'C_exec':>10s} "
           f"{'C_plan':>9s} {'fails':>5s}")
     ok = False
     for bench in ("job", "extjob", "stack"):
         d = load(bench)
         if d is None:
-            print(f"{bench:8s} -- missing (run repro.experiments.main_experiment)")
+            log.info(f"{bench:8s} -- missing (run repro.experiments.main_experiment)")
             continue
         ok = True
         base = totals(d["spark"])["total"]
         for m in METHODS:
             t = totals(d[m])
-            print(f"{bench:8s} {m:10s} {t['total']:10.1f} {t['exec']:10.1f} "
+            log.info(f"{bench:8s} {m:10s} {t['total']:10.1f} {t['exec']:10.1f} "
                   f"{t['plan']:9.1f} {t['fails']:5d}"
                   + (f"   ({(base - t['total']) / base:+.1%} vs spark)"
                      if m != "spark" else ""))
@@ -33,7 +35,7 @@ def fig7():
 
 
 def fig10_top10():
-    print("\n== Fig. 10: top-10 queries improved by AQORA vs Spark default ==")
+    log.info("\n== Fig. 10: top-10 queries improved by AQORA vs Spark default ==")
     for bench in ("job", "extjob", "stack"):
         d = load(bench)
         if d is None:
@@ -42,19 +44,19 @@ def fig10_top10():
         aq = {r["query"]: r["total"] for r in d["aqora"]}
         imp = sorted(((sp[q] - aq[q]) / sp[q], q) for q in sp)[::-1][:10]
         tops = ", ".join(f"{q.split('/')[-1]}:{d_:.0%}" for d_, q in imp)
-        print(f"{bench:8s} {tops}")
+        log.info(f"{bench:8s} {tops}")
         csv_line(f"fig10_{bench}_best_improvement", 0, f"{imp[0][0]:.3f}")
 
 
 def bushy_proportion():
-    print("\n== §VII-C3: proportion of test queries executed as bushy plans ==")
+    log.info("\n== §VII-C3: proportion of test queries executed as bushy plans ==")
     for bench in ("job", "extjob", "stack"):
         d = load(bench)
         if d is None:
             continue
         n = len(d["aqora"])
         b = sum(r.get("bushy", False) for r in d["aqora"])
-        print(f"{bench:8s} {b}/{n} ({b / n:.1%}) bushy under AQORA "
+        log.info(f"{bench:8s} {b}/{n} ({b / n:.1%}) bushy under AQORA "
               f"(spark default: {sum(r.get('bushy', 0) for r in d['spark'])})")
         csv_line(f"bushy_{bench}", 0, f"{b / n:.3f}")
 
@@ -76,7 +78,7 @@ def bench_rollout(episodes: int = 48, batch: int = 8):
     from repro.sql import datagen, workloads
     from repro.sql.cbo import Estimator
 
-    print(f"\n== batched rollout engine: serial vs lockstep batch={batch} ==")
+    log.info(f"\n== batched rollout engine: serial vs lockstep batch={batch} ==")
     db = datagen.make_job_like(scale=0.04, seed=0)
     wl = workloads.make_workload("job", n_train=8, n_test_per_template=1,
                                  seed=7)
@@ -99,7 +101,7 @@ def bench_rollout(episodes: int = 48, batch: int = 8):
         rollout_batch(db, qs[i:i + batch], est, agent,
                       seeds=list(range(batch)))
     bat_eps = episodes / (time.perf_counter() - t0)
-    print(f"rollout  serial: {ser_eps:7.1f} eps/s   batched: {bat_eps:7.1f} "
+    log.info(f"rollout  serial: {ser_eps:7.1f} eps/s   batched: {bat_eps:7.1f} "
           f"eps/s   ({bat_eps / ser_eps:.2f}x)")
 
     # ---- end-to-end training throughput (rollout + PPO replay)
@@ -115,7 +117,7 @@ def bench_rollout(episodes: int = 48, batch: int = 8):
 
     ser_train = timed_train(1)
     bat_train = timed_train(batch)
-    print(f"train    serial: {ser_train:7.1f} eps/s   batched: {bat_train:7.1f} "
+    log.info(f"train    serial: {ser_train:7.1f} eps/s   batched: {bat_train:7.1f} "
           f"eps/s   ({bat_train / ser_train:.2f}x)")
     csv_line("rollout_serial_eps_per_s", 0, f"{ser_eps:.1f}")
     csv_line("rollout_batched_eps_per_s", 0, f"{bat_eps:.1f}")
@@ -129,7 +131,7 @@ def bench_rollout(episodes: int = 48, batch: int = 8):
         "train_batched_eps_per_s": round(bat_train, 1),
         "train_speedup": round(bat_train / ser_train, 2),
     })
-    print(f"wrote {p}")
+    log.info(f"wrote {p}")
     return True
 
 

@@ -3,7 +3,9 @@ three terms per cell, bottleneck, useful-FLOPs ratio, MFU bound; plus the
 multi-pod (2x16x16) pass/fail summary and the §Perf hillclimb deltas."""
 import json
 
-from benchmarks.common import DRYRUN, PERF, csv_line
+from benchmarks.common import DRYRUN, PERF, bench_logger, csv_line
+
+log = bench_logger("roofline")
 
 
 def _fmt_row(r):
@@ -17,27 +19,27 @@ def _fmt_row(r):
 def main():
     single = DRYRUN / "single"
     if not single.exists():
-        print("bench_roofline: run repro.launch.dryrun --all --mesh both first")
+        log.info("bench_roofline: run repro.launch.dryrun --all --mesh both first")
         return False
-    print("\n== Roofline baseline: 16x16 pod (256 chips), all 40 cells ==")
-    print(f"{'arch':24s} {'shape':12s} {'comp(s)':>8s} {'mem(s)':>8s} "
+    log.info("\n== Roofline baseline: 16x16 pod (256 chips), all 40 cells ==")
+    log.info(f"{'arch':24s} {'shape':12s} {'comp(s)':>8s} {'mem(s)':>8s} "
           f"{'coll(s)':>8s} {'bound':10s} {'useful':>7s} {'mfu':>7s}")
     recs = []
     for f in sorted(single.glob("*.json")):
         r = json.loads(f.read_text())
         if r.get("skipped"):
-            print(f"{r['arch']:24s} {r['shape']:12s} "
+            log.info(f"{r['arch']:24s} {r['shape']:12s} "
                   f"{'— skipped: sub-quadratic-only cell (DESIGN.md)':>40s}")
             continue
         if not r.get("ok"):
-            print(f"{r['arch']:24s} {r['shape']:12s} FAILED: {r.get('error')}")
+            log.info(f"{r['arch']:24s} {r['shape']:12s} FAILED: {r.get('error')}")
             continue
         recs.append(r)
-        print(_fmt_row(r))
+        log.info(_fmt_row(r))
     n_mem_ok = sum(1 for r in recs
                    if r["memory"]["argument_size_in_bytes"]
                    + r["memory"]["temp_size_in_bytes"] < 16e9)
-    print(f"\ncells compiled: {len(recs)}; within 16 GB HBM "
+    log.info(f"\ncells compiled: {len(recs)}; within 16 GB HBM "
           f"(args+temps): {n_mem_ok}/{len(recs)}")
     csv_line("roofline_cells_compiled", 0, len(recs))
 
@@ -45,24 +47,24 @@ def main():
     if multi.exists():
         ms = [json.loads(f.read_text()) for f in sorted(multi.glob("*.json"))]
         ok = sum(1 for r in ms if r.get("ok"))
-        print(f"multi-pod 2x16x16 (512 chips): {ok}/{len(ms)} cells pass "
+        log.info(f"multi-pod 2x16x16 (512 chips): {ok}/{len(ms)} cells pass "
               f"(incl. sanctioned skips)")
         csv_line("multipod_cells_ok", 0, ok)
 
     if PERF.exists():
         logs = sorted(PERF.glob("*__log.json"))
         if logs:
-            print("\n== §Perf hillclimbs (full logs in EXPERIMENTS.md) ==")
+            log.info("\n== §Perf hillclimbs (full logs in EXPERIMENTS.md) ==")
             for lf in logs:
                 entries = json.loads(lf.read_text())
                 cell = lf.stem.replace("__log", "")
                 confirmed = sum(1 for e in entries
                                 if e["verdict"].startswith("confirmed"))
-                print(f"{cell}: {len(entries)} iterations, {confirmed} confirmed")
+                log.info(f"{cell}: {len(entries)} iterations, {confirmed} confirmed")
         opt = sorted(set(PERF.glob("*__moesm.json")) | set(PERF.glob("*__kvseq.json"))
                      | set(PERF.glob("*__iter*.json")))
         if opt:
-            print("\n== §Perf optimized records (baseline vs beyond-paper) ==")
+            log.info("\n== §Perf optimized records (baseline vs beyond-paper) ==")
             for f in opt:
                 r = json.loads(f.read_text())
                 base = PERF / f"{r['arch']}__{r['shape']}__baseline.json"
@@ -72,7 +74,7 @@ def main():
                 b_bound = b["roofline"]["t_bound_s"] if b else float("nan")
                 o = r["roofline"]
                 d = (b_bound - o["t_bound_s"]) / b_bound if b else 0.0
-                print(f"{r['arch']:24s} {r['shape']:12s} "
+                log.info(f"{r['arch']:24s} {r['shape']:12s} "
                       f"{b_bound:8.3f}s -> {o['t_bound_s']:8.3f}s ({d:+.1%}) "
                       f"[{r.get('layout','')}]")
                 csv_line(f"perf_{r['arch']}_{r['shape']}", 0, f"{d:.3f}")

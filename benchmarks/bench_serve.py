@@ -19,7 +19,10 @@ against a cache-off run.
 """
 import time
 
-from benchmarks.common import bench_args, csv_line, emit_bench_json
+from benchmarks.common import (bench_args, bench_logger, csv_line,
+                               emit_bench_json)
+
+log = bench_logger("serve")
 
 STRAG_EVERY = 8
 
@@ -72,7 +75,7 @@ def bench_straggler_mix(db, wl, est, agent, *, n_queries: int, rate: float,
                         n_lanes: int):
     from repro.serve.service import QueryService
 
-    print(f"\n== serving: async lanes vs lockstep batching "
+    log.info(f"\n== serving: async lanes vs lockstep batching "
           f"({n_queries} queries, 1 straggler per {STRAG_EVERY}, "
           f"{n_lanes} lanes, open-loop {rate} qps) ==")
     out = {}
@@ -84,14 +87,14 @@ def bench_straggler_mix(db, wl, est, agent, *, n_queries: int, rate: float,
         _, stats = svc.run(stream)
         host = time.perf_counter() - t0
         out[policy] = stats
-        print(f"{policy:9s} qps={stats.qps:7.2f}  p50={stats.latency_p50:8.2f}s "
+        log.info(f"{policy:9s} qps={stats.qps:7.2f}  p50={stats.latency_p50:8.2f}s "
               f"p99={stats.latency_p99:8.2f}s  makespan={stats.makespan:8.1f}s "
               f"queue_wait={stats.queue_wait_mean:7.2f}s "
               f"in-lane={stats.service_mean:6.2f}s "
               f"hit_rate={stats.cache['hit_rate']:.2f}  "
               f"mean_batch={stats.mean_decide_batch:.1f}  host={host:.1f}s")
     a, l = out["async"], out["lockstep"]
-    print(f"async/lockstep: qps {a.qps / l.qps:.2f}x, "
+    log.info(f"async/lockstep: qps {a.qps / l.qps:.2f}x, "
           f"p99 {l.latency_p99 / max(a.latency_p99, 1e-9):.2f}x lower")
     csv_line("serve_async_qps", 0, f"{a.qps:.2f}")
     csv_line("serve_async_p99_s", 0, f"{a.latency_p99:.2f}")
@@ -106,7 +109,7 @@ def bench_dynamic(db, wl, est, agent, *, n_queries: int, rate: float,
     from repro.sql.executor import run_adaptive
     from repro.sql.plans import syntactic_plan
 
-    print(f"\n== serving: delta-table dynamic workload "
+    log.info(f"\n== serving: delta-table dynamic workload "
           f"(delta every {delta_every} queries, +{delta_rows} rows) ==")
     fast = fast_subset(wl)
     stream = open_loop_stream(fast, rate=rate, n_queries=n_queries, seed=13,
@@ -117,7 +120,7 @@ def bench_dynamic(db, wl, est, agent, *, n_queries: int, rate: float,
     svc = QueryService(db, agent, est=est, n_lanes=n_lanes, policy="async")
     _, stats = svc.run(stream)
     cache = stats.cache
-    print(f"qps={stats.qps:7.2f}  p99={stats.latency_p99:8.2f}s  "
+    log.info(f"qps={stats.qps:7.2f}  p99={stats.latency_p99:8.2f}s  "
           f"cache: hits={cache['hits']} misses={cache['misses']} "
           f"evictions={cache['evictions']} "
           f"invalidations={cache['invalidations']} "
@@ -128,7 +131,7 @@ def bench_dynamic(db, wl, est, agent, *, n_queries: int, rate: float,
     cold = run_adaptive(db, q, syntactic_plan(q), est, reuse_stages=False)
     ok = ([s.out_rows for s in warm.stages] ==
           [s.out_rows for s in cold.stages]) and warm.latency == cold.latency
-    print(f"post-delta cache-on == cache-off: {'OK' if ok else 'MISMATCH'}")
+    log.info(f"post-delta cache-on == cache-off: {'OK' if ok else 'MISMATCH'}")
     csv_line("serve_dynamic_hit_rate", 0, f"{cache['hit_rate']:.3f}")
     csv_line("serve_dynamic_invalidations", 0, cache["invalidations"])
     return stats, ok

@@ -1,20 +1,22 @@
 """Paper Fig. 8: p30/p60/p90/p99 end-to-end latencies per method."""
-from benchmarks.common import METHODS, csv_line, load, pct
+from benchmarks.common import METHODS, bench_logger, csv_line, load, pct
+
+log = bench_logger("tails")
 
 
 def main():
-    print("\n== Fig. 8: percentile end-to-end latencies (s) ==")
+    log.info("\n== Fig. 8: percentile end-to-end latencies (s) ==")
     ok = False
     for bench in ("job", "extjob", "stack"):
         d = load(bench)
         if d is None:
             continue
         ok = True
-        print(f"\n[{bench}]  {'method':10s} " +
+        log.info(f"\n[{bench}]  {'method':10s} " +
               " ".join(f"{f'p{q}':>8s}" for q in (30, 60, 90, 99)))
         for m in METHODS:
             ps = [pct(d[m], q) for q in (30, 60, 90, 99)]
-            print(f"          {m:10s} " + " ".join(f"{p:8.2f}" for p in ps))
+            log.info(f"          {m:10s} " + " ".join(f"{p:8.2f}" for p in ps))
         csv_line(f"fig8_{bench}_aqora_p99", 0, f"{pct(d['aqora'], 99):.2f}")
     return ok
 

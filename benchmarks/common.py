@@ -6,7 +6,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import logging
 import pathlib
+import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 AQORA = ROOT / "results" / "aqora"
@@ -36,8 +38,23 @@ def pct(rows, q):
     return float(np.percentile(xs, q))
 
 
+def bench_logger(name: str = "") -> logging.Logger:
+    """The benchmark suite's logger under the `repro.bench` hierarchy:
+    message-only stdout lines (same surface the prints produced), root
+    configured once, children share it. Mirrors the `repro.train`
+    hierarchy PR 3 set up for the training drivers."""
+    root = logging.getLogger("repro.bench")
+    if not root.handlers:
+        h = logging.StreamHandler(sys.stdout)
+        h.setFormatter(logging.Formatter("%(message)s"))
+        root.addHandler(h)
+        root.setLevel(logging.INFO)
+        root.propagate = False
+    return root.getChild(name) if name else root
+
+
 def csv_line(name, us_per_call, derived):
-    print(f"CSV,{name},{us_per_call},{derived}")
+    bench_logger().info(f"CSV,{name},{us_per_call},{derived}")
 
 
 def update_bench_json(entries: dict, name: str = "BENCH_rollout.json"):
@@ -67,5 +84,5 @@ def bench_args(argv=None, *, lanes: int = 8, extra=None):
 def emit_bench_json(entries: dict, name: str):
     """Persist one serving benchmark's result blob and announce the path."""
     p = update_bench_json(entries, name=name)
-    print(f"wrote {p}")
+    bench_logger().info(f"wrote {p}")
     return p

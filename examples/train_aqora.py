@@ -29,6 +29,7 @@ import argparse
 import logging
 import time
 
+
 from repro.baselines import run_spark_default
 from repro.checkpoint import Checkpointer, agent_state, install_agent_state
 from repro.core.agent import AgentConfig, AqoraAgent
@@ -36,6 +37,8 @@ from repro.core.encoding import WorkloadMeta
 from repro.core.train_loop import evaluate, train_agent
 from repro.sql import datagen, workloads
 from repro.sql.cbo import Estimator
+
+log = logging.getLogger("repro.train.example")
 
 
 def main():
@@ -60,7 +63,7 @@ def main():
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO, format="%(message)s")
 
-    print("building database + workload ...")
+    log.info("building database + workload ...")
     db = datagen.make_job_like(scale=args.scale, seed=0)
     wl = workloads.make_workload("job", n_train=100, n_test_per_template=1)
     est = Estimator(db, db.stats)
@@ -73,13 +76,13 @@ def main():
             tree, step, extra = ckpt.restore(agent_state(agent))
             install_agent_state(agent, tree)
             ep0 = extra.get("episodes", step)
-            print(f"resumed from checkpoint step {step} "
+            log.info(f"resumed from checkpoint step {step} "
                   f"({ep0} episodes already trained)")
         except FileNotFoundError:
-            print(f"no checkpoint under {args.ckpt_dir}; training fresh")
+            log.info(f"no checkpoint under {args.ckpt_dir}; training fresh")
 
     t0 = time.time()
-    print(f"training AQORA for {args.episodes} episodes "
+    log.info(f"training AQORA for {args.episodes} episodes "
           f"(curriculum: cbo-only -> +runtime leads -> full) ...")
     # a resumed agent already walked the curriculum in its first run —
     # continue at the full action space instead of re-restricting it
@@ -87,7 +90,7 @@ def main():
                               est=est, log_every=50, agent=agent,
                               batch_size=args.batch_size,
                               use_curriculum=(ep0 == 0))
-    print(f"trained in {time.time()-t0:.0f}s; "
+    log.info(f"trained in {time.time()-t0:.0f}s; "
           f"decision model: {agent.param_count()} params")
     # restore picks the NEWEST step, so this run's params must land
     # strictly past whatever is on disk (a rerun into a used dir, even a
@@ -97,18 +100,18 @@ def main():
     if not ckpt.save(step, agent_state(agent),
                      extra={"episodes": ep0 + args.episodes}):
         raise RuntimeError(f"checkpoint step {step} was not written")
-    print(f"checkpointed agent (step {step}) -> {args.ckpt_dir}")
+    log.info(f"checkpointed agent (step {step}) -> {args.ckpt_dir}")
 
     rows = evaluate(db, wl.test, agent, est=est)
     aq = sum(r["total"] for r in rows)
     sp = sum(run_spark_default(db, q, est).latency for q in wl.test)
     fails_aq = sum(r["failed"] for r in rows)
-    print(f"\nheld-out test ({len(wl.test)} queries):")
-    print(f"  Spark default : {sp:8.1f}s")
-    print(f"  AQORA         : {aq:8.1f}s ({(sp-aq)/sp:+.1%}) "
+    log.info(f"\nheld-out test ({len(wl.test)} queries):")
+    log.info(f"  Spark default : {sp:8.1f}s")
+    log.info(f"  AQORA         : {aq:8.1f}s ({(sp-aq)/sp:+.1%}) "
           f"failures={fails_aq}")
     ex = next(r for r in rows if r["actions"])
-    print(f"  example intervention on {ex['query']}: {ex['actions']}")
+    log.info(f"  example intervention on {ex['query']}: {ex['actions']}")
 
     if args.serve or args.online:
         from repro.serve.driver import open_loop_stream
@@ -126,15 +129,15 @@ def main():
         stream = open_loop_stream(wl.test, rate=2.0,
                                   n_queries=3 * len(wl.test), seed=1)
         _, stats = svc.run(stream)
-        print(f"\nonline serving ({args.lanes} async lanes, "
+        log.info(f"\nonline serving ({args.lanes} async lanes, "
               f"{stats.n_completed} queries):")
-        print(f"  qps={stats.qps:.2f} p50={stats.latency_p50:.2f}s "
+        log.info(f"  qps={stats.qps:.2f} p50={stats.latency_p50:.2f}s "
               f"p99={stats.latency_p99:.2f}s fails={stats.n_failed}")
-        print(f"  cache: {stats.cache}")
+        log.info(f"  cache: {stats.cache}")
         if args.online:
-            print(f"  learn: {learner.stats.as_dict()}")
+            log.info(f"  learn: {learner.stats.as_dict()}")
             if learner.store is not None:
-                print(f"  store: {learner.store.stats()}")
+                log.info(f"  store: {learner.store.stats()}")
 
 
 if __name__ == "__main__":

@@ -105,6 +105,12 @@ class BackgroundLearner:
 
     def attach(self, scheduler) -> None:
         self._sched = scheduler
+        if self.store is not None and \
+                getattr(self.store, "obs", None) is None:
+            # wire the store's observability sink to the scheduler's
+            # tracer (QueryService attaches obs before hooks, so it is
+            # already installed here; None stays None)
+            self.store.obs = getattr(scheduler, "obs", None)
         if self.curriculum is not None:
             scheduler.stage = self.curriculum.stage
             self._gate_explore()
@@ -138,6 +144,10 @@ class BackgroundLearner:
         self.stats.updates += 1
         self.update_log.append({"update": self.stats.updates,
                                 "n_traj": len(exps), **m})
+        obs = getattr(self._sched, "obs", None)
+        if obs is not None:
+            obs.event("learner_update",
+                      {"update": self.stats.updates, "n_traj": len(exps)})
         if self.store is None or self.stats.updates % self.gate_every:
             return
         self.stats.gates += 1

@@ -67,6 +67,14 @@ class PolicyStore:
         # between skip re-probing the incumbent
         self._inc_score: Optional[tuple] = None
         self.probe_log: List[Dict] = []     # one record per set_probe
+        # optional observability sink (serve.obs.Tracer): wired by
+        # whatever owns both the store and a traced scheduler (the
+        # learner / breaker attach seams); None = silent
+        self.obs = None
+
+    def _emit(self, kind: str, attrs: Dict) -> None:
+        if self.obs is not None:
+            self.obs.event(kind, attrs)
 
     # ------------------------------------------------------------ probe set
     def set_probe(self, probe: Sequence, *, reason: str = "") -> None:
@@ -118,6 +126,7 @@ class PolicyStore:
                                f"written (step already on disk?)")
         self.versions.append({"step": step, **(extra or {})})
         self.serving_step = step
+        self._emit("policy_commit", {"step": step})
         return step
 
     def evaluate_and_maybe_swap(self, serving_agent, candidate_agent, *,
@@ -132,11 +141,15 @@ class PolicyStore:
             rec["reason"] = "empty probe set"
             self.gate_log.append(rec)
             log.info("gate@%d: REJECT (%s)", step, rec["reason"])
+            self._emit("gate_eval", {"step": step, "accepted": False,
+                                     "reason": rec["reason"]})
             return rec
         if not params_finite(candidate_agent):
             rec["reason"] = "non-finite candidate params"
             self.gate_log.append(rec)
             log.info("gate@%d: REJECT (%s)", step, rec["reason"])
+            self._emit("gate_eval", {"step": step, "accepted": False,
+                                     "reason": rec["reason"]})
             return rec
         cand = self.probe_score(candidate_agent, db, est, cluster)
         inc_key = (self.serving_step,
@@ -165,6 +178,11 @@ class PolicyStore:
         log.info("gate@%d: %s cand=%.3fs inc=%.3fs%s", step,
                  "ACCEPT" if rec["accepted"] else "REJECT", cand, inc,
                  " (shadow)" if self.mode == "shadow" else "")
+        self._emit("gate_eval", {
+            "step": rec["step"], "accepted": rec["accepted"],
+            "swapped": rec["swapped"], "reason": rec["reason"],
+            "candidate_score": round(cand, 6),
+            "incumbent_score": round(inc, 6)})
         return rec
 
     # ------------------------------------------------------------ rollback
@@ -179,8 +197,10 @@ class PolicyStore:
                 step = max(prior)
         tree, s, _ = self.ckpt.restore(agent_state(agent), step)
         install_agent_state(agent, tree, copy=True)
+        prior = self.serving_step
         self.serving_step = s
         log.info("rollback: serving policy restored to step %d", s)
+        self._emit("policy_rollback", {"from_step": prior, "to_step": s})
         return s
 
     def stats(self) -> Dict:

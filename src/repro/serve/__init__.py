@@ -52,6 +52,14 @@ Four cooperating pieces, each in its own module:
                 default: without it (or with the injector disabled and
                 no retry/hedge/breaker) completions are bit-identical.
 
+  obs/          Deterministic observability plane: per-query span trees
+                on the virtual clock (`Tracer`), fixed-bucket metrics
+                sampled into a time series (`MetricsRegistry`), Chrome-
+                trace/JSONL export with a schema validator, a bounded
+                flight recorder, and the trace-diff explainer. Attached
+                via `QueryService(obs=Tracer())`; obs=None keeps every
+                emit point short-circuited and completions bit-identical.
+
   qos/          SLO-aware multi-tenant control plane: tenant registry
                 (token buckets, fair share, cache budgets), admission-
                 time latency predictor, degradation ladder, and the
@@ -92,6 +100,9 @@ _EXPORTS = {
     "PolicyBreaker": "repro.serve.recover",
     "RecoveryManager": "repro.serve.recover",
     "RecoveryStats": "repro.serve.recover",
+    "Tracer": "repro.serve.obs",
+    "MetricsRegistry": "repro.serve.obs",
+    "FlightRecorder": "repro.serve.obs",
     "DegradationLadder": "repro.serve.qos",
     "LatencyPredictor": "repro.serve.qos",
     "TenantRegistry": "repro.serve.qos",

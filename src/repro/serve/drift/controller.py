@@ -209,6 +209,11 @@ class DriftController:
             self.refresh_log.append(
                 {"t": round(t_apply, 4), "tables": list(tables),
                  "modeled_s": round(modeled_total, 4)})
+            if getattr(sched, "obs", None) is not None:
+                sched.obs.event("re_analyze",
+                                {"tables": list(tables),
+                                 "modeled_s": round(modeled_total, 6)},
+                                t=t_apply)
             if self.store is not None:
                 # fresh stats change probe planning without a version bump:
                 # the store's version-keyed incumbent cache must not survive
@@ -233,8 +238,13 @@ class DriftController:
             trigger=f"peak drift score {peak:.2f}")
         # a sample of all state-less trajectories trains nothing and is
         # not counted as a refit; the cooldown restarts either way
-        self.stats.refits += self.predictor.n_refits > n0
+        refitted = self.predictor.n_refits > n0
+        self.stats.refits += refitted
         self._since_refit = 0
+        if refitted and getattr(self._sched, "obs", None) is not None:
+            self._sched.obs.event("predictor_refit",
+                                  {"peak_score": round(peak, 6),
+                                   "n_refits": self.predictor.n_refits})
 
     def _maybe_recover_probes(self, drifts) -> None:
         if self.probes is None:
@@ -247,6 +257,9 @@ class DriftController:
                              reason=f"drifted tables: {','.join(hot)}")
         self._probe_cover_set = hot
         self.stats.probe_resamples += 1
+        if getattr(self._sched, "obs", None) is not None:
+            self._sched.obs.event("probe_resample",
+                                  {"drifted_tables": list(hot)})
 
     def summary(self) -> Dict:
         return {**self.stats.as_dict(),

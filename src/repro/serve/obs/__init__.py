@@ -1,0 +1,26 @@
+"""Deterministic observability plane for the serving stack.
+
+  trace    Tracer: per-query span trees + control-plane event log +
+           flight recorder, all on the virtual clock
+  metrics  MetricsRegistry: fixed-bucket counters/gauges/histograms
+           sampled into a time series at virtual-clock intervals
+  export   Chrome trace-event / versioned JSONL export + validator
+  explain  trace-diff: attribute latency deltas to phases exactly
+
+Attach with `QueryService(..., obs=Tracer())`; obs=None keeps every emit
+point short-circuited and completions bit-identical to an untraced run.
+"""
+from repro.serve.obs.explain import diff_profiles, format_diff, run_profile
+from repro.serve.obs.export import (chrome_trace, validate_trace_jsonl,
+                                    write_chrome_trace, write_trace_jsonl)
+from repro.serve.obs.metrics import (Counter, Gauge, Histogram,
+                                     MetricsRegistry)
+from repro.serve.obs.trace import (SCHEMA_VERSION, Event, FlightRecorder,
+                                   RunTrace, Span, Tracer)
+
+__all__ = [
+    "SCHEMA_VERSION", "Tracer", "Span", "Event", "RunTrace",
+    "FlightRecorder", "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "chrome_trace", "write_chrome_trace", "write_trace_jsonl",
+    "validate_trace_jsonl", "run_profile", "diff_profiles", "format_diff",
+]

@@ -49,9 +49,13 @@ class PolicyBreaker:
         self._cooldown_left = 0
         self._prior_mode: Optional[str] = None
         self.trips: List[tuple] = []
+        self._sched = None
 
     # ------------------------------------------------------------- hooks
     def attach(self, scheduler) -> None:
+        self._sched = scheduler
+        if getattr(self.store, "obs", None) is None:
+            self.store.obs = getattr(scheduler, "obs", None)
         scheduler.on_complete.append(self.on_complete)
 
     def _freeze_baseline(self) -> Optional[tuple]:
@@ -99,6 +103,12 @@ class PolicyBreaker:
 
     def _trip(self, seq: int, reason: str) -> None:
         bad = self._watched_step
+        obs = getattr(self._sched, "obs", None)
+        if obs is not None:
+            # emitted before the rollback so the flight-recorder dump
+            # captures the pre-rollback record tail
+            obs.event("breaker_trip", {"seq": seq, "step": bad,
+                                       "reason": reason})
         restored = self.store.rollback(self.agent)
         self.trips.append((seq, bad, restored, reason))
         # cooldown: shadow mode — candidates keep being scored, no swaps

@@ -171,6 +171,11 @@ class RecoveryManager:
 
     def _requeue(self, arr, dec, finish_t: float) -> None:
         t = dec.ticket
+        obs = getattr(self.sched, "obs", None)
+        if obs is not None:
+            obs.on_retry(arr.seq, t.attempt, t.mode,
+                         t.kinds[-1] if t.kinds else "", finish_t,
+                         dec.delay)
         self.stats.n_retries += 1
         field = {"resume": "n_resumed", "replan": "n_replanned",
                  "restart": "n_restarted"}[t.mode]
@@ -233,6 +238,9 @@ class RecoveryManager:
                               hedge_idx=h.idx)
             self._pairs[lane.idx] = (pair, "primary")
             self._pairs[h.idx] = (pair, "hedge")
+            if getattr(sched, "obs", None) is not None:
+                sched.obs.on_hedge_launch(arr.seq, att, lane.idx, h.idx,
+                                          admit)
             sched._start(h, hedge_arr, admit,
                          hook_budget=budget, degraded=lane.degraded,
                          predicted=lane.predicted)
@@ -254,6 +262,11 @@ class RecoveryManager:
         del self._pairs[pair.hedge_idx]
         sched._release(loser["lane"], loser_free)
         sched._release(winner["lane"], winner["finish_t"])
+        if getattr(sched, "obs", None) is not None:
+            sched.obs.event("hedge_resolve",
+                            {"seq": pair.arr.seq, "hedge_won": hedge_won,
+                             "cancelled": loser_free < loser["finish_t"]},
+                            t=winner["finish_t"])
         if hedge_won:
             self.stats.n_hedge_wins += 1
         arr = pair.arr

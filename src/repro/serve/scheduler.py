@@ -238,6 +238,10 @@ class LaneScheduler:
         # fault profiles at _start, retry/hedge interception at _finish,
         # hedge launches each tick. None = no recovery seams on any path.
         self.recovery = recovery
+        # observability plane (serve.obs.Tracer.attach sets this): every
+        # emit point below is guarded by `self.obs is not None`, so
+        # obs=None keeps the run bit-identical to an untraced scheduler
+        self.obs = None
         self._pending: deque = deque()
         if recovery is not None:
             recovery.attach(self)
@@ -272,6 +276,8 @@ class LaneScheduler:
             horizon = np.inf if self.window is None else t_min + self.window
             self._decide([l for l in susp if l.next_event <= horizon])
             self.ticks += 1
+            if self.obs is not None:
+                self.obs.on_tick(t_min)
         return sorted(self.completions, key=lambda c: c.seq)
 
     def schedule_barrier(self, fn: Callable, label: str = "task") -> None:
@@ -303,6 +309,11 @@ class LaneScheduler:
                 dt = fn(self, t_apply)
                 self._write_ts = t_apply + (dt or 0.0)
                 self.task_log.append((self._write_ts, label))
+                if self.obs is not None:
+                    self.obs.event("barrier_task",
+                                   {"label": label,
+                                    "charge_s": round(dt or 0.0, 6)},
+                                   t=self._write_ts)
                 continue
             if not pending:
                 return
@@ -376,6 +387,11 @@ class LaneScheduler:
                         tenant=item.tenant, arrival_t=item.t,
                         reject_t=start_t, deadline=item.deadline,
                         predicted=dec.predicted, reason=dec.reason))
+                    if self.obs is not None:
+                        self.obs.event("admission_reject",
+                                       {"seq": item.seq,
+                                        "tenant": item.tenant,
+                                        "reason": dec.reason}, t=start_t)
                     continue
                 if dec.action == "defer":
                     # rate-limited: floor the admit time and re-select —
@@ -411,13 +427,17 @@ class LaneScheduler:
         if self.recovery is not None:
             faults = self.recovery.run_faults(arrival)
             self.recovery.on_admit(arrival, admit_t)
+        # the tracer opens an attempt record and returns the sink the
+        # executor writes scan/join/failure notes into
+        trace = None if self.obs is None \
+            else self.obs.on_admit(lane, arrival, admit_t)
         run = AdaptiveRun(self.db, q, plan, self.est,
                           self.cluster, max_hook_steps=steps,
                           plan_time=0.0, reuse_stages=self.reuse_stages,
                           cache=cache, faults=faults,
                           init_mats=None if ticket is None else ticket.mats,
                           init_stages_done=0 if ticket is None
-                          else ticket.stages_done)
+                          else ticket.stages_done, trace=trace)
         lane.run, lane.traj = run, Trajectory()
         lane.key = as_key(arrival.seed if arrival.seed is not None
                           else lane.idx)
@@ -484,6 +504,10 @@ class LaneScheduler:
             lane.traj.rewards.append(r)
             lane.traj.decoded.append(agent.space.decode(a))
             lane.extra_plan += extra
+            if self.obs is not None:
+                # the decision lands at the suspended stage boundary
+                self.obs.on_decide(lane, lane.next_event,
+                                   lane.traj.decoded[-1], r)
             lane.traj.hook_seconds += (prep_t[bi] + act_share
                                        + time.perf_counter() - t0)
             lane.state = lane.run.resume(new_plan)
@@ -501,6 +525,10 @@ class LaneScheduler:
         # decision cost is a host metric (traj.hook_seconds / C_plan), kept
         # off the clock so completion times are bit-reproducible
         finish_t = lane.admit_t + res.latency
+        if self.obs is not None:
+            # annotate BEFORE recovery interception: a requeued/stashed
+            # attempt still records its own result and finish time
+            self.obs.on_run_finish(lane, res, finish_t)
         if self.recovery is not None and \
                 self.recovery.on_finish(lane, traj, res, finish_t):
             return                    # requeued as a retry, or hedge-stashed
@@ -543,6 +571,10 @@ class LaneScheduler:
             cb(comp)
 
     def _release(self, lane: _Lane, free_at: float) -> None:
+        if self.obs is not None:
+            # archive the lane's attempt closed at free_at — for a
+            # cancelled hedge loser that is the winner's finish time
+            self.obs.on_release(lane, free_at)
         lane.free_at = free_at
         lane.run = lane.state = lane.arrival = None
         lane.hook_budget, lane.degraded, lane.predicted = None, False, None

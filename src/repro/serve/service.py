@@ -118,7 +118,7 @@ class QueryService:
                  cache_bytes: int = 256 * 1024 * 1024,
                  reuse_stages: bool = True, explore: bool = False,
                  hooks: Sequence = (), tenants=None, admission=None,
-                 recovery=None):
+                 recovery=None, obs=None):
         """`hooks` are objects with an `attach(scheduler)` method (e.g. the
         lifelong-learning loop's `learn.TrajectoryHarvester` /
         `learn.BackgroundLearner`); each is attached to every scheduler
@@ -132,8 +132,10 @@ class QueryService:
         `serve.qos.AdmissionPolicy`) plugs admission control into every
         scheduler this service creates. `recovery` (a
         `serve.recover.RecoveryManager`) plugs the failure-recovery
-        control plane in the same way. All None = the PR-2 path,
-        bit-identical."""
+        control plane in the same way. `obs` (a `serve.obs.Tracer`)
+        attaches the observability plane — BEFORE the hooks, so hook
+        attach seams (learner/breaker) can wire their own emit paths to
+        it. All None = the PR-2 path, bit-identical."""
         self.db = db
         self.agent = agent
         self.est = est if est is not None else Estimator(db, db.stats)
@@ -145,6 +147,7 @@ class QueryService:
         self.tenants = tenants
         self.admission = admission
         self.recovery = recovery
+        self.obs = obs
         if reuse_stages:
             if tenants is not None:
                 # every REGISTERED tenant gets its own partition (explicit
@@ -170,6 +173,8 @@ class QueryService:
             explore=self.explore, cluster=self.cluster, policy=self.policy,
             window=self.window, reuse_stages=self.reuse_stages,
             admission=self.admission, recovery=self.recovery)
+        if self.obs is not None:
+            self.obs.attach(self.scheduler)
         for h in self.hooks:
             h.attach(self.scheduler)
         comps = self.scheduler.run(list(stream))
@@ -190,6 +195,11 @@ class QueryService:
         pred = getattr(self.admission, "predictor", None)
         if pred is not None and hasattr(pred, "reset_stats"):
             pred.reset_stats()
+        if self.obs is not None:
+            # spans, events, metrics registry and flight recorder all
+            # accumulate across run() calls — same discipline as the
+            # cache counters above
+            self.obs.reset()
 
     def run_queries(self, queries: Sequence, *, seeds=None) \
             -> Tuple[List[Completion], ServiceStats]:

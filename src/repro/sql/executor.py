@@ -381,14 +381,18 @@ class AdaptiveRun:
                  cache: Optional[StageCache] = None,
                  faults=None,
                  init_mats: Optional[Dict[frozenset, MaterializedRel]] = None,
-                 init_stages_done: int = 0):
+                 init_stages_done: int = 0,
+                 trace=None):
         """`faults` is an optional per-run fault profile (an object with
         `charge(seconds, state) -> seconds` that may raise `QueryFailure`,
         see serve.recover.faults) consulted at every latency charge; None
         keeps the execution path bit-identical. `init_mats` /
         `init_stages_done` seed the run with already-materialized stage
         results (a retry resuming from its failed attempt's last stage
-        boundary: it pays only the stages the plan still contains)."""
+        boundary: it pays only the stages the plan still contains).
+        `trace` is an optional per-attempt sink (duck-typed like
+        serve.obs.RunTrace: `scan`/`stage`/`fail`) that receives elapsed-
+        offset stage notes; None skips every note, bit-identically."""
         self.cluster = cluster if cluster is not None else ClusterModel()
         self.query = query
         self.max_hook_steps = max_hook_steps
@@ -399,6 +403,7 @@ class AdaptiveRun:
                                   est, 0, 0.0, int(init_stages_done),
                                   self.cluster)
         self._faults = faults
+        self._trace = trace
         self.result: Optional[RunResult] = None
         self._ex = Executor(db, self.cluster, reuse_stages=reuse_stages,
                             cache=cache)
@@ -451,6 +456,7 @@ class AdaptiveRun:
     def _drive(self) -> Generator[RuntimeState, Optional[Node], None]:
         state, cluster, ex, query = (self.state, self.cluster, self._ex,
                                      self.query)
+        trace = self._trace
 
         def charge(seconds: float):
             if self._faults is not None:
@@ -460,6 +466,22 @@ class AdaptiveRun:
             state.elapsed += seconds
             if state.elapsed >= cluster.timeout:
                 raise QueryFailure("timeout", f"{state.elapsed:.1f}s")
+
+        def scan_charged(alias: str) -> MaterializedRel:
+            """Scan + charge, with an optional trace note (cache hit
+            detected by the stats delta around the executor call)."""
+            if trace is None:
+                m, secs = ex.scan(query, alias)
+                charge(secs)
+                return m
+            cs = ex.cache_stats
+            h0 = cs.hits if cs is not None else 0
+            e0 = state.elapsed
+            m, secs = ex.scan(query, alias)
+            charge(secs)
+            trace.scan(alias, e0, state.elapsed, m.nrows,
+                       cs is not None and cs.hits > h0)
+            return m
 
         try:
             while True:
@@ -472,8 +494,7 @@ class AdaptiveRun:
                 if isinstance(state.plan, Leaf):
                     # plan may be a single leaf only if query has 1 relation
                     if state.plan.covered() not in state.mats:
-                        m, secs = ex.scan(query, state.plan.alias)
-                        charge(secs)
+                        m = scan_charged(state.plan.alias)
                         state.mats[m.aliases] = m
                     return
 
@@ -498,9 +519,7 @@ class AdaptiveRun:
                 for ch in (jn.left, jn.right):
                     key = ch.covered()
                     if key not in state.mats:
-                        m, secs = ex.scan(query, ch.alias)
-                        charge(secs)
-                        state.mats[key] = m
+                        state.mats[key] = scan_charged(ch.alias)
                     sides.append(state.mats[key])
                 left_m, right_m = sides
 
@@ -518,8 +537,25 @@ class AdaptiveRun:
                 # joining two multi-alias intermediates == bushy shape (§VI-B1)
                 if len(left_m.aliases) > 1 and len(right_m.aliases) > 1:
                     self._bushy = True
-                out, rec = ex.join(query, left_m, right_m, jn.conds, method)
-                charge(rec.seconds)
+                if trace is None:
+                    out, rec = ex.join(query, left_m, right_m, jn.conds,
+                                       method)
+                    charge(rec.seconds)
+                else:
+                    # estimated-vs-actual rows only priced when tracing:
+                    # the estimate is pure observation, never fed back
+                    est_rows = state.est.join_rows(
+                        query, left_m.aliases, float(left_m.nrows),
+                        right_m.aliases, float(right_m.nrows))
+                    cs = ex.cache_stats
+                    h0 = cs.hits if cs is not None else 0
+                    e0 = state.elapsed
+                    out, rec = ex.join(query, left_m, right_m, jn.conds,
+                                       method)
+                    charge(rec.seconds)
+                    trace.stage(out.aliases, method, e0, state.elapsed,
+                                out.nrows, est_rows, rec.shuffles,
+                                cs is not None and cs.hits > h0)
                 self._stages.append(rec)
                 self._tot_shuffles += rec.shuffles
                 self._tot_sbytes += rec.shuffle_bytes
@@ -543,6 +579,8 @@ class AdaptiveRun:
                     return
         except QueryFailure as f:
             self._failure = f
+            if trace is not None:
+                trace.fail(f.kind, state.elapsed)
             return
 
 

@@ -13,7 +13,12 @@ Two families, both pure functions of their seeds (so failures replay):
     put/get/invalidate/refresh traffic every partition's resident bytes
     equal the sum of its entries, never exceed its budget, and
     admitted − evicted == resident; the aggregate counters equal the sum
-    over partitions.
+    over partitions;
+
+  * the tracer's span trees — under the same seeded chaos, every child
+    span nests inside its parent's interval, per-lane attempt spans never
+    overlap, each query's non-hedge attempt spans count exactly
+    `Completion.attempts`, and timestamps are well-ordered everywhere.
 """
 import numpy as np
 import pytest
@@ -191,6 +196,77 @@ def test_virtual_clock_invariants_survive_fault_schedules(job_workload,
         [(c.seq, c.admit_t, c.finish_t, c.lane, c.attempts,
           c.result.failed, c.hedged) for c in comps2]
     assert mgr.stats.as_dict() == mgr2.stats.as_dict()
+
+
+# --------------------------------------------------- span trees (serve.obs)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_span_tree_invariants_under_chaos(job_workload, agent, seed):
+    """Trace a seeded chaos storm and check the span-tree geometry: the
+    randomized mix of crashes, retries, hedges and deltas exercises every
+    assembly path (cancelled losers, backoffs, clamped timeout stages)."""
+    from scenarios import FixedPredictor
+    from repro.serve.obs import Tracer
+    from repro.serve.recover import (FaultInjector, HedgePolicy,
+                                     RecoveryManager, RetryPolicy)
+
+    rng = np.random.default_rng(700 + seed)
+    stream = _random_stream(rng, n_queries=12, n_deltas=2)
+    n_lanes = int(rng.integers(2, 5))
+    db = fresh_db(scale=0.05, seed=seed)
+    mgr = RecoveryManager(
+        injector=FaultInjector(seed=900 + seed, p_crash=0.05,
+                               p_transient=0.25, p_slow=0.2,
+                               p_corrupt=0.1),
+        retry=RetryPolicy(max_attempts=3, backoff=0.2),
+        hedge=HedgePolicy(factor=4.0, predictor=FixedPredictor()))
+    tracer = Tracer()
+    sched = LaneScheduler(db, Estimator(db, db.stats), agent,
+                          n_lanes=n_lanes, recovery=mgr)
+    tracer.attach(sched)
+    comps = sched.run(stream)
+    assert mgr.stats.n_failures > 0, "chaos at these rates must bite"
+
+    spans = tracer.spans
+    by_id = {s.span_id: s for s in spans}
+    roots = tracer.roots()
+    assert len(roots) == len(comps)            # exactly one tree per query
+
+    # well-ordered intervals, and children nest inside their parents
+    for s in spans:
+        assert s.t1 >= s.t0
+        if s.parent_id != -1:
+            p = by_id[s.parent_id]
+            assert p.t0 <= s.t0 and s.t1 <= p.t1
+            assert s.seq == p.seq              # trees never cross queries
+
+    # roots mirror their Completion exactly
+    by_seq = {c.seq: c for c in comps}
+    for r in roots:
+        c = by_seq[r.seq]
+        assert (r.t0, r.t1, r.lane) == (c.arrival_t, c.finish_t, c.lane)
+        assert r.attrs["failed"] == bool(c.result.failed)
+        assert r.attrs["attempts"] == c.attempts
+
+    # attempt spans: per-lane occupancy never overlaps (across ALL
+    # queries — lanes serialize attempts, hedges included)
+    attempt_spans = [s for s in spans if s.name.startswith("attempt")]
+    for lane in range(n_lanes):
+        mine = sorted((s for s in attempt_spans if s.lane == lane),
+                      key=lambda s: s.t0)
+        for prev, nxt in zip(mine, mine[1:]):
+            assert nxt.t0 >= prev.t1
+
+    # non-hedge attempt spans count the Completion's attempts; the tracer
+    # never had to flag a bookkeeping mismatch
+    for c in comps:
+        n_real = sum(1 for s in attempt_spans
+                     if s.seq == c.seq and not s.attrs["hedge"])
+        assert n_real == c.attempts
+        # exactly one attempt produced the completion
+        finals = [s for s in attempt_spans
+                  if s.seq == c.seq and s.cat == "execute"]
+        assert len(finals) == 1 and finals[0].lane == c.lane
+    assert not any(e.kind == "attempt_mismatch" for e in tracer.events)
 
 
 # ------------------------------------------------------ cache accounting

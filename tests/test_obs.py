@@ -1,0 +1,254 @@
+"""The observability plane (serve.obs): off means OFF (bit-identical
+completions), traces are deterministic, reset_stats really resets,
+exports validate against their own schema, and the explainer's phase
+attribution is exact. Span-tree geometry lives in test_invariants.py."""
+import json
+
+import numpy as np
+import pytest
+
+from scenarios import FixedPredictor, fresh_db, qos_setup, qos_stream
+
+from repro.serve.obs import MetricsRegistry, Tracer
+from repro.serve.obs.explain import (PHASES, diff_profiles, phases_for,
+                                     run_profile)
+from repro.serve.obs.export import (chrome_trace, validate_trace_jsonl,
+                                    write_trace_jsonl)
+from repro.serve.recover import (FaultInjector, HedgePolicy, RecoveryManager,
+                                 RetryPolicy)
+from repro.serve.service import QueryService
+from repro.sql.cbo import Estimator
+
+
+def _chaos_recovery(seed):
+    return RecoveryManager(
+        injector=FaultInjector(seed=seed, p_crash=0.05, p_transient=0.25,
+                               p_slow=0.2, p_corrupt=0.1),
+        retry=RetryPolicy(max_attempts=3, backoff=0.2),
+        hedge=HedgePolicy(factor=4.0, predictor=FixedPredictor()))
+
+
+def _chaos_stream(rng, n_queries=10):
+    from scenarios import fast_query
+    from repro.serve.deltas import DeltaBatch
+    from repro.serve.scheduler import Arrival
+    t, out = 0.0, []
+    for i in range(n_queries):
+        t += 0.05 + float(rng.exponential(0.4))
+        out.append(Arrival(t, query=fast_query(int(rng.integers(6))),
+                           seed=int(rng.integers(2 ** 31)),
+                           deadline=t + 20.0))
+        if i == n_queries // 2:
+            out.append(Arrival(t, delta=DeltaBatch(
+                "movie_info", n_append=400, seed=5)))
+    return out
+
+
+def _serve(agent, seed, *, obs=None, n_lanes=3):
+    db = fresh_db(scale=0.05, seed=0)
+    svc = QueryService(db, agent, est=Estimator(db, db.stats),
+                       n_lanes=n_lanes, recovery=_chaos_recovery(900 + seed),
+                       obs=obs)
+    comps, stats = svc.run(
+        _chaos_stream(np.random.default_rng(40 + seed)))
+    return comps, stats, svc
+
+
+def _sig(comps):
+    return [(c.seq, c.admit_t, c.finish_t, c.lane, c.attempts,
+             c.result.failed, c.hedged) for c in comps]
+
+
+# -------------------------------------------------------------- off == off
+@pytest.mark.parametrize("seed", [0, 1])
+def test_obs_off_is_bit_identical(job_workload, agent, seed):
+    """The tentpole gate: attaching a Tracer must not move a single
+    completion — every emit point short-circuits when obs is None, and
+    when it isn't, tracing only OBSERVES (chaos, retries and hedges
+    included)."""
+    off, _, _ = _serve(agent, seed)
+    on, _, _ = _serve(agent, seed, obs=Tracer())
+    assert _sig(off) == _sig(on)
+
+
+def test_traces_are_deterministic(job_workload, agent):
+    """Same seeded stream, two tracers: byte-identical span/event dumps
+    (everything is virtual-clock; no host time leaks into the trace)."""
+    t1, t2 = Tracer(), Tracer()
+    _serve(agent, 3, obs=t1)
+    _serve(agent, 3, obs=t2)
+    assert [s.as_dict() for s in t1.spans] == [s.as_dict() for s in t2.spans]
+    assert [e.as_dict() for e in t1.events] == \
+        [e.as_dict() for e in t2.events]
+    assert t1.metrics.snapshot() == t2.metrics.snapshot()
+
+
+# ------------------------------------------------------------- reset_stats
+def test_reset_stats_clears_tracer_and_metrics(job_workload, agent):
+    """`QueryService.reset_stats()` drops the tracer's accumulated state
+    (spans, events, metrics, flight recorder) along with the cache
+    counters, so a reused service re-measures from zero."""
+    tracer = Tracer()
+    db = fresh_db(scale=0.05, seed=0)
+    svc = QueryService(db, agent, est=Estimator(db, db.stats), n_lanes=3,
+                       recovery=_chaos_recovery(901), obs=tracer)
+    stream = _chaos_stream(np.random.default_rng(41))
+    comps, _ = svc.run(stream)
+    n_spans = len(tracer.spans)
+    assert n_spans > 0 and tracer.events
+    assert tracer.metrics.counter("completions").value == len(comps)
+
+    svc.reset_stats(clear_entries=True)
+    assert tracer.spans == [] and tracer.events == []
+    assert tracer.now == 0.0
+    assert tracer.flight.dumps == [] and not tracer.flight._ring
+    snap = tracer.metrics.snapshot()
+    assert all(v == 0 for v in snap["counters"].values())
+    assert snap["histograms"] == {} and snap["n_samples"] == 0
+    assert svc.cache.stats.as_dict()["hits"] == 0
+
+    # the service is reusable: an identical re-run on the unmutated parts
+    # rebuilds the same-shaped trace from a clean slate
+    comps2, _ = svc.run(stream)
+    assert len(tracer.roots()) == len(comps2)
+    assert tracer.metrics.counter("completions").value == len(comps2)
+    # roots arrive in finish order; one per query either way
+    assert sorted(s.seq for s in tracer.roots()) == \
+        [c.seq for c in comps2]
+
+
+# ----------------------------------------------------- stats serialization
+def test_service_stats_as_dict_round_trips(job_workload, agent):
+    """`ServiceStats.as_dict()` / `TenantStats.as_dict()` are the JSON
+    surface every benchmark persists: pin the key names and the fact that
+    the whole blob survives json round-tripping unchanged."""
+    db = fresh_db(scale=0.05, seed=0)
+    reg, adm = qos_setup()
+    svc = QueryService(db, agent, est=Estimator(db, db.stats), n_lanes=2,
+                       policy="edf", tenants=reg, admission=adm)
+    _, stats = svc.run(qos_stream(job_workload))
+
+    d = stats.as_dict()
+    assert d == json.loads(json.dumps(d))        # JSON-round-trip stable
+    assert set(d) >= {
+        "n_completed", "n_failed", "makespan", "qps", "latency_mean",
+        "latency_p50", "latency_p99", "service_mean", "cache", "ticks",
+        "mean_decide_batch", "hook_seconds", "queue_wait_mean",
+        "queue_wait_p99", "n_rejected", "n_degraded", "n_slo_miss",
+        "slo_miss_rate", "per_tenant", "failure_kinds", "attempts_total",
+        "n_retried", "n_recovered", "n_hedged"}
+    assert set(d["per_tenant"]) == {"gold", "bulk"}
+    for td in d["per_tenant"].values():
+        assert set(td) >= {
+            "n_completed", "n_failed", "n_rejected", "n_degraded",
+            "n_slo_miss", "slo_miss_rate", "qps", "latency_p50",
+            "latency_p99", "queue_wait_mean", "cache", "failure_kinds",
+            "n_recovered", "n_hedged"}
+    td = stats.per_tenant["gold"].as_dict()
+    assert td == json.loads(json.dumps(td))
+
+
+# ----------------------------------------------------------------- export
+def test_export_round_trip_and_validation(job_workload, agent, tmp_path):
+    tracer = Tracer()
+    _serve(agent, 5, obs=tracer)
+    path = str(tmp_path / "trace.jsonl")
+    write_trace_jsonl(tracer, path)
+    assert validate_trace_jsonl(path) == []
+
+    # header counts really cross-check the body
+    lines = open(path).read().splitlines()
+    assert validate_trace_jsonl(path) == []
+    with open(path, "w") as f:
+        f.write("\n".join(lines[:-1]))           # drop one record
+    assert validate_trace_jsonl(path)
+
+    # a corrupted span is caught, not silently accepted
+    bad = json.loads(lines[1])
+    assert bad["type"] == "span"
+    bad["cat"] = "nonsense"
+    with open(path, "w") as f:
+        f.write("\n".join([lines[0], json.dumps(bad)] + lines[2:]))
+    assert any("cat" in e for e in validate_trace_jsonl(path))
+
+    ct = chrome_trace(tracer)
+    evs = ct["traceEvents"]
+    assert evs and all(e["ph"] in ("X", "i", "M") for e in evs)
+    n_x = sum(e["ph"] == "X" for e in evs)
+    assert n_x == len(tracer.spans)      # zero-width hooks included
+    assert sum(e["ph"] == "i" for e in evs) == len(tracer.events)
+
+
+# -------------------------------------------------------------- explainer
+def test_explainer_attribution_is_exact(job_workload, agent):
+    """Phases partition each query's latency EXACTLY, so diffing two runs
+    of the same stream (here: 1 lane vs 3 lanes — pure queueing delta)
+    attributes the total delta to phases with zero residual."""
+    t1, t3 = Tracer(), Tracer()
+    c1, _, _ = _serve(agent, 7, obs=t1, n_lanes=1)
+    c3, _, _ = _serve(agent, 7, obs=t3, n_lanes=3)
+
+    for tracer, comps in ((t1, c1), (t3, c3)):
+        prof = run_profile(tracer)
+        assert set(prof) == {c.seq for c in comps}
+        for c in comps:
+            p = prof[c.seq]
+            assert p["total"] == pytest.approx(c.latency, abs=1e-12)
+            assert sum(p[ph] for ph in PHASES) == \
+                pytest.approx(p["total"], abs=1e-9)
+            assert all(p[ph] >= -1e-9 for ph in PHASES)
+
+    diff = diff_profiles(run_profile(t1), run_profile(t3),
+                         label_a="1lane", label_b="3lanes", q=99.0)
+    assert diff["n_common"] == len(c1)
+    assert diff["n_only_a"] == diff["n_only_b"] == 0
+    for key in ("mean", "pq"):
+        d = diff[key]
+        assert sum(d["phases"].values()) == \
+            pytest.approx(d["delta"], abs=1e-9)
+        assert d["delta"] == pytest.approx(d["b"] - d["a"], abs=1e-12)
+    # more lanes can only help: the 3-lane run is no slower on average
+    assert diff["mean"]["delta"] <= 1e-9
+
+
+def test_phases_for_handles_degenerate_trees():
+    from repro.serve.obs.trace import Span
+    root = Span(1, -1, 0, "q0", "query", 0.0, 10.0)
+    assert phases_for(root, []) == \
+        {"queue": 10.0, "execute": 0.0, "retry": 0.0, "hedge": 0.0}
+    kids = [Span(2, 1, 0, "attempt-1", "execute", 4.0, 10.0),
+            Span(3, 1, 0, "attempt-1h", "hedge", 2.0, 6.0),
+            Span(4, 1, 0, "backoff-1", "retry", 1.0, 3.0)]
+    p = phases_for(root, kids)
+    # priority execute > hedge > retry on overlap; queue is the residual
+    assert p == {"queue": 1.0, "execute": 6.0, "hedge": 2.0, "retry": 1.0}
+    assert sum(p.values()) == root.dur
+
+
+# ---------------------------------------------------------------- metrics
+def test_metrics_registry_sampling_and_reset():
+    m = MetricsRegistry(interval=5.0)
+    state = {"v": 1.0}
+    m.gauge("g", fn=lambda: state["v"])
+    m.counter("c").inc(2)
+    m.advance(1.0)                      # anchors; no boundary crossed yet
+    assert m.series == []
+    m.advance(6.0)                      # crosses t=5 -> one row, stamped 5
+    state["v"] = 2.0
+    m.advance(23.0)                     # crosses 10,15,20 -> ONE row at 20
+    assert [r["t"] for r in m.series] == [5.0, 20.0]
+    assert m.series[0]["c"] == 2 and m.series[1]["g"] == 2.0
+
+    h = m.histogram("lat", (1.0, 10.0))
+    h.observe(1.0)                      # boundary value -> lower bucket
+    h.observe(50.0)                     # overflow bucket
+    assert h.counts == [1, 0, 1]
+    assert h.mean == pytest.approx(25.5)
+    assert h.as_dict() == {"bounds": [1.0, 10.0], "counts": [1, 0, 1],
+                           "n": 2, "sum": 51.0}
+
+    m.reset()
+    assert m.counter("c").value == 0 and m.series == []
+    assert m.snapshot()["histograms"] == {}
+    m.advance(3.0), m.advance(11.0)     # gauge fns survive the reset
+    assert m.series and m.series[-1]["g"] == 2.0
