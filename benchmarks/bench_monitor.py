@@ -1,0 +1,348 @@
+"""SLO-watchdog benchmark: seeded ground-truth incidents scored on
+detection latency and top-1 root-cause attribution — feeds
+results/BENCH_monitor.json.
+
+Four scenarios, each with a KNOWN injected cause at a KNOWN virtual
+time, run with the `SloMonitor` attached (alerts unwired):
+
+  bad_swap     bench_faults' scripted outage: an incumbent pinned to
+               cbo-replan is hot-swapped mid-stream for a candidate
+               pinned to noop — every post-swap stats-trap OOMs. Truth:
+               policy_swap (the plan-provenance ledger holds the
+               prior-step counterfactual for the same template+band).
+  drift_trap   bench_drift's stale-stats world: a growth delta lands
+               mid-stream and arms the trap queries; no recovery plane,
+               so post-drift traps fail with OOM. Truth: stats_drift
+               (delta_apply event + table-version band shift).
+  fault_burst  the same world with stats in sync (no delta) and a
+               `FaultInjector` confined to a seq window — a seeded
+               outage with a start and an end; the retry ladder absorbs
+               most of it, so the signature is retry traffic, not
+               failures. Truth: fault_burst.
+  hot_tenant   two-tenant stream on a 2-lane scheduler: tenant b's
+               arrival rate jumps ~x40 at a known time and the queue
+               backs up. No control-plane events at all — the quiet
+               event log plus queue-dominant phase shift is the
+               attribution. Truth: hot_tenant.
+
+Scoring (per scenario): detection = first anomaly at/after the
+injection time; detection lag in COMPLETIONS (virtual ticks — the
+monitor observes once per completion) and virtual seconds; top-1 = the
+detected incident's highest-scored hypothesis vs the ground truth.
+Each scenario also re-runs with the monitor off (no tracer either):
+completions must be BIT-IDENTICAL — the watchdog watches, it does not
+steer. Gates: >= 3 of 4 detected, top-1 accuracy >= 2/3 among detected,
+every detection lag <= 24 completions, every identity arm exact.
+
+  PYTHONPATH=src python -m benchmarks.bench_monitor [--smoke]
+"""
+import bisect
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import (bench_args, bench_logger, csv_line,
+                               emit_bench_json)
+from benchmarks.bench_faults import (CHAOS_SEED, DEMO_CAP, DEMO_GROWTH_ROWS,
+                                     DEMO_SCALE, SLO, _build_world, _cluster,
+                                     _force_head_action, _stream, _trap)
+
+log = bench_logger("monitor")
+
+SCALE = 0.06                   # bench_faults' smoke world (trap armed
+CAP = 1_500_000                # under this materialize cap)
+N_QUERIES = 64
+DRIFT_AT = 24
+BURST = (28, 44)               # fault_burst injector seq window
+P_BURST_CRASH, P_BURST_TRANSIENT, P_BURST_SLOW = 0.02, 0.3, 0.1
+T_FLOOD = 55.0                 # hot_tenant: virtual time the flood starts
+LAG_BOUND = 24                 # max completions injection -> detection
+
+
+def _monitor_cfg():
+    from repro.serve.obs import MonitorConfig
+    # one config for every scenario: windows sized so detectors are warm
+    # well before each injection (earliest at completion 24) and the RCA
+    # baseline is non-empty at detection (lookback < warm stream prefix)
+    return MonitorConfig(window=12, min_warm=6, min_n=8, cooldown=6,
+                         merge_gap=10, lookback=16, baseline_max=96)
+
+
+def _sig(comps):
+    return tuple((c.seq, round(c.finish_t, 9), round(c.latency, 9),
+                  bool(c.result.failed), c.failure_kind, c.attempts)
+                 for c in comps)
+
+
+# -------------------------------------------------------------- scenarios
+def _scn_bad_swap(meta, wl, *, lanes, monitored):
+    """bench_faults' scripted bad swap, watched instead of broken."""
+    from repro.core.agent import AgentConfig, AqoraAgent
+    from repro.learn.policy_store import PolicyStore
+    from repro.serve.deltas import DeltaBatch, apply_delta
+    from repro.serve.obs import SloMonitor, Tracer
+    from repro.serve.scheduler import Arrival, LaneScheduler
+    from repro.sql import datagen
+    from repro.sql.catalog import analyze
+    from repro.sql.cbo import Estimator
+    from benchmarks.bench_serve import fast_subset
+
+    db = datagen.make_job_like(scale=DEMO_SCALE, seed=0)
+    apply_delta(db, DeltaBatch("cast_info", n_append=DEMO_GROWTH_ROWS,
+                               seed=999))
+    db.stats = analyze(db, rng=np.random.default_rng(0))
+    est = Estimator(db, db.stats)
+
+    agent = AqoraAgent(meta, AgentConfig(max_steps=1), seed=0)
+    _force_head_action(agent, 0)                 # action 0 == cbo(1)
+    store = PolicyStore(tempfile.mkdtemp(prefix="bench_monitor_ps_"),
+                        probe=[], mode="gate")
+    store.commit(agent, 1)
+
+    sched = LaneScheduler(db, est, agent, n_lanes=lanes,
+                          cluster=_cluster(cap=DEMO_CAP))
+    monitor = None
+    if monitored:
+        tracer = Tracer()
+        tracer.attach(sched)
+        store.obs = tracer                       # commits land in the log
+        monitor = SloMonitor(config=_monitor_cfg(), store=store)
+        monitor.attach(sched)
+
+    n, swap_at = 60, 24
+    traps = [_trap(i, 1896 + i) for i in range(5)]
+    fast = fast_subset(wl)[:6]
+    rng = np.random.default_rng(41)
+    t, stream = 0.0, []
+    for i in range(n):
+        t += float(rng.exponential(0.5))
+        q = traps[(i // 2) % 5] if i % 2 == 0 else fast[i % 6]
+        stream.append(Arrival(t, query=q, seed=int(rng.integers(2 ** 31)),
+                              deadline=t + SLO))
+
+    def swapper(comp):
+        if comp.seq == swap_at - 1 and store.serving_step == 1:
+            _force_head_action(agent, agent.space.noop_idx)
+            store.commit(agent, 2)
+    sched.on_complete.insert(0, swapper)
+    comps = sched.run(stream)
+    if monitor is not None:
+        monitor.finalize()
+    inject_t = next(c.finish_t for c in comps if c.seq == swap_at - 1)
+    return {"comps": comps, "monitor": monitor, "inject_t": inject_t,
+            "truth": "policy_swap"}
+
+
+def _scn_drift_trap(meta, wl, *, lanes, monitored):
+    """bench_drift's stale-stats outage with NO recovery plane: every
+    post-delta trap OOMs until the catalog is refreshed (it never is)."""
+    from repro.baselines import CboReplanAgent
+    from repro.serve.obs import SloMonitor
+    from repro.serve.service import QueryService
+
+    db, est = _build_world(SCALE)
+    stream = _stream(wl, db, n_queries=N_QUERIES, rate=1.0, seed=31,
+                     drift_at=DRIFT_AT)
+    monitor = SloMonitor(config=_monitor_cfg()) if monitored else None
+    svc = QueryService(db, CboReplanAgent(meta, max_steps=3), est=est,
+                       n_lanes=lanes, cluster=_cluster(cap=CAP),
+                       monitor=monitor)
+    comps, _ = svc.run(stream)
+    inject_t = next(a.t for a in stream if a.delta is not None)
+    return {"comps": comps, "monitor": monitor, "inject_t": inject_t,
+            "truth": "stats_drift"}
+
+
+def _scn_fault_burst(meta, wl, *, lanes, monitored):
+    """Same world, stats in sync (drift never lands), injector confined
+    to a seq window; the retry ladder absorbs most of the burst."""
+    from repro.baselines import CboReplanAgent
+    from repro.serve.obs import SloMonitor
+    from repro.serve.recover import (FaultInjector, RecoveryManager,
+                                     RetryPolicy)
+    from repro.serve.service import QueryService
+
+    db, est = _build_world(SCALE)
+    stream = _stream(wl, db, n_queries=N_QUERIES, rate=1.0, seed=31,
+                     drift_at=10 ** 9)
+    injector = FaultInjector(seed=CHAOS_SEED, p_crash=P_BURST_CRASH,
+                             p_transient=P_BURST_TRANSIENT,
+                             p_slow=P_BURST_SLOW, slow_factor=(8.0, 48.0),
+                             window=BURST)
+    mgr = RecoveryManager(injector=injector,
+                          retry=RetryPolicy(max_attempts=3, backoff=0.5))
+    monitor = SloMonitor(config=_monitor_cfg()) if monitored else None
+    svc = QueryService(db, CboReplanAgent(meta, max_steps=3), est=est,
+                       n_lanes=lanes, cluster=_cluster(cap=CAP),
+                       recovery=mgr, monitor=monitor)
+    comps, _ = svc.run(stream)
+    inject_t = stream[BURST[0]].t        # no delta arrival: seq == index
+    return {"comps": comps, "monitor": monitor, "inject_t": inject_t,
+            "truth": "fault_burst"}
+
+
+def _scn_hot_tenant(meta, wl, *, lanes, monitored):
+    """Two tenants on TWO lanes: tenant b idles at 0.1 qps until the
+    flood (24 arrivals at ~6 qps) backs the queue up. `lanes` is ignored
+    on purpose — the scenario needs scarce capacity to show load."""
+    del lanes
+    from repro.baselines import CboReplanAgent
+    from repro.serve.obs import SloMonitor
+    from repro.serve.scheduler import Arrival
+    from repro.serve.service import QueryService
+    from benchmarks.bench_serve import fast_subset
+
+    db, est = _build_world(SCALE)
+    fast = fast_subset(wl)[:8]
+    rng = np.random.default_rng(17)
+    stream = []
+    t, i = 0.0, 0
+    while t < 90.0:                              # tenant a: steady 0.8 qps
+        t += float(rng.exponential(1.0 / 0.8))
+        stream.append(Arrival(t, query=fast[i % 8],
+                              seed=int(rng.integers(2 ** 31)),
+                              deadline=t + SLO, tenant="a"))
+        i += 1
+    t = 0.0
+    while True:                                  # tenant b: trickle ...
+        t += float(rng.exponential(1.0 / 0.1))
+        if t >= T_FLOOD:
+            break
+        stream.append(Arrival(t, query=fast[(i + 3) % 8],
+                              seed=int(rng.integers(2 ** 31)),
+                              deadline=t + SLO, tenant="b"))
+        i += 1
+    t = T_FLOOD
+    for j in range(24):                          # ... then the flood
+        t += float(rng.exponential(1.0 / 6.0))
+        stream.append(Arrival(t, query=fast[j % 8],
+                              seed=int(rng.integers(2 ** 31)),
+                              deadline=t + SLO, tenant="b"))
+    stream.sort(key=lambda a: a.t)
+
+    monitor = SloMonitor(config=_monitor_cfg()) if monitored else None
+    svc = QueryService(db, CboReplanAgent(meta, max_steps=3), est=est,
+                       n_lanes=2, cluster=_cluster(), monitor=monitor)
+    comps, _ = svc.run(stream)
+    return {"comps": comps, "monitor": monitor, "inject_t": T_FLOOD,
+            "truth": "hot_tenant"}
+
+
+# ---------------------------------------------------------------- scoring
+def _grade(monitor, inject_t, truth):
+    """Detection = first anomaly at/after the injection; lag counted in
+    completions (the monitor's virtual tick). An incident opened BEFORE
+    the injection is a false positive but does not mask detection — the
+    flood anomaly may extend it, so grading is anomaly-level."""
+    recs_t = [r["t"] for r in monitor.records]
+    inject_idx = bisect.bisect_left(recs_t, inject_t)
+    hit = None
+    for inc in monitor.incidents:
+        for a in inc.anomalies:
+            if a.t >= inject_t - 1e-9:
+                hit = (inc, a)
+                break
+        if hit:
+            break
+    out = {"truth": truth,
+           "n_incidents": len(monitor.incidents),
+           "false_incidents": sum(i.t_open < inject_t - 1e-9
+                                  for i in monitor.incidents),
+           "n_anomalies": monitor.totals()[0],
+           "ledger_keys": len(monitor.ledger)}
+    if hit is None:
+        out.update({"detected": False, "correct": False,
+                    "lag_bounded": False})
+        return out
+    inc, a = hit
+    detect_idx = bisect.bisect_right(recs_t, a.t)
+    lag = detect_idx - inject_idx
+    top = inc.top
+    out.update({
+        "detected": True,
+        "detected_metric": a.metric,
+        "detect_lag_completions": lag,
+        "detect_lag_virtual_s": round(a.t - inject_t, 3),
+        "lag_bounded": lag <= LAG_BOUND,
+        "top1": top.cause if top else None,
+        "correct": bool(top and top.cause == truth),
+        "summary": top.summary if top else "",
+        "incident": inc.as_dict(),
+    })
+    return out
+
+
+# ------------------------------------------------------------------- main
+def main(argv=None):
+    args = bench_args(argv, lanes=4)
+    from repro.core.encoding import WorkloadMeta
+    from repro.sql import workloads
+
+    wl = workloads.make_workload("job", n_train=48, n_test_per_template=1,
+                                 seed=7)
+    meta = WorkloadMeta.from_workload(wl)
+
+    scenarios = (("bad_swap", _scn_bad_swap),
+                 ("drift_trap", _scn_drift_trap),
+                 ("fault_burst", _scn_fault_burst),
+                 ("hot_tenant", _scn_hot_tenant))
+    log.info(f"== SLO watchdog: {len(scenarios)} seeded incidents "
+             f"(swap/drift/burst/flood), lag bound {LAG_BOUND} completions, "
+             f"identity arms {'drift_trap only (smoke)' if args.smoke else 'all'} ==")
+
+    results = {}
+    for name, fn in scenarios:
+        t0 = time.perf_counter()
+        on = fn(meta, wl, lanes=args.lanes, monitored=True)
+        g = _grade(on["monitor"], on["inject_t"], on["truth"])
+        # the identity arm re-runs the WHOLE scenario untraced and
+        # unmonitored: completions must match the watched run bit-exactly
+        if not args.smoke or name == "drift_trap":
+            off = fn(meta, wl, lanes=args.lanes, monitored=False)
+            g["bit_identical"] = _sig(on["comps"]) == _sig(off["comps"])
+        g["host_seconds"] = round(time.perf_counter() - t0, 2)
+        results[name] = g
+        ident = g.get("bit_identical")
+        log.info(
+            f"{name:12s} detected={str(g['detected']):5s} "
+            f"top1={g.get('top1') or '-':12s} correct={g['correct']} "
+            f"lag={g.get('detect_lag_completions', '-')} completions "
+            f"({g.get('detect_lag_virtual_s', '-')}s virtual) "
+            f"false={g['false_incidents']} "
+            f"identity={'-' if ident is None else ident} "
+            f"[{g['host_seconds']:.1f}s host]")
+        if g["detected"]:
+            log.info(f"{'':12s} -> {g['summary']}")
+
+    # ------------------------------------------------------------- gates
+    n_det = sum(g["detected"] for g in results.values())
+    n_cor = sum(g["correct"] for g in results.values())
+    top1_acc = n_cor / max(n_det, 1)
+    lags_ok = all(g["lag_bounded"] for g in results.values()
+                  if g["detected"])
+    ident_ok = all(g.get("bit_identical", True) for g in results.values())
+    ok = bool(n_det >= 3 and n_cor >= 2 and top1_acc >= 2 / 3
+              and lags_ok and ident_ok)
+    log.info(f"gates: detected={n_det}/{len(scenarios)} "
+             f"top1_acc={top1_acc:.2f} lags_bounded={lags_ok} "
+             f"bit_identical={ident_ok} -> ok={ok}")
+
+    csv_line("monitor_detected", 0, n_det)
+    csv_line("monitor_top1_acc", 0, round(top1_acc, 4))
+    emit_bench_json({
+        "smoke": args.smoke, "n_lanes": args.lanes,
+        "lag_bound_completions": LAG_BOUND,
+        "monitor_config": {"window": 12, "min_warm": 6, "min_n": 8,
+                           "cooldown": 6, "merge_gap": 10, "lookback": 16,
+                           "baseline_max": 96},
+        "scenarios": results,
+        "gates": {"n_detected": n_det, "n_correct": n_cor,
+                  "top1_acc": round(top1_acc, 4), "lags_bounded": lags_ok,
+                  "bit_identical": ident_ok, "ok": ok},
+    }, name="BENCH_monitor.json")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if main() else 1)

@@ -20,9 +20,9 @@ def main() -> None:
                             bench_ablation_rl, bench_ablation_strategy,
                             bench_cbo_cost, bench_delta_table, bench_drift,
                             bench_dynamic, bench_faults, bench_kernels,
-                            bench_obs, bench_online, bench_qos,
-                            bench_query_perf, bench_roofline, bench_serve,
-                            bench_tails)
+                            bench_monitor, bench_obs, bench_online,
+                            bench_qos, bench_query_perf, bench_roofline,
+                            bench_serve, bench_tails)
     ran, missing = [], []
     for mod in (bench_query_perf, bench_serve, bench_online, bench_qos,
                 bench_drift, bench_faults, bench_delta_table, bench_tails,
@@ -36,14 +36,18 @@ def main() -> None:
             log.info(f"[{name}] ERROR: {type(e).__name__}: {e}")
             ok = False
         (ran if ok else missing).append(name)
-    # observability pricing rides along non-gating: its overhead numbers
-    # are informative, not a pass/fail surface for the suite
-    try:
-        obs_ok = bench_obs.main(["--smoke"])
-    except Exception as e:                           # pragma: no cover
-        log.info(f"[bench_obs] ERROR: {type(e).__name__}: {e}")
-        obs_ok = False
-    log.info(f"[bench_obs] non-gating smoke: {'ok' if obs_ok else 'FAILED'}")
+    # the observability plane rides along non-gating: pricing overhead
+    # (bench_obs) and watchdog attribution (bench_monitor) are
+    # informative, not a pass/fail surface for the suite
+    for mod in (bench_obs, bench_monitor):
+        name = mod.__name__.split(".")[-1]
+        try:
+            obs_ok = mod.main(["--smoke"])
+        except Exception as e:                       # pragma: no cover
+            log.info(f"[{name}] ERROR: {type(e).__name__}: {e}")
+            obs_ok = False
+        log.info(f"[{name}] non-gating smoke: "
+                 f"{'ok' if obs_ok else 'FAILED'}")
     log.info(f"\nbenchmarks complete: {len(ran)} ran, "
              f"{len(missing)} missing/failed"
              + (f" ({', '.join(missing)})" if missing else ""))

@@ -163,12 +163,19 @@ class PolicyStore:
         if cand <= inc * (1.0 + self.rel_tol) + self.abs_tol:
             rec["accepted"] = True
             if self.mode == "gate":
+                prior_step = self.serving_step
                 install_agent_state(serving_agent,
                                     agent_state(candidate_agent), copy=True)
                 rec["step"] = self.commit(serving_agent, step,
                                           extra={"probe_score": cand,
                                                  "incumbent_score": inc})
                 rec["swapped"] = True
+                # explicit swap marker (commit fires for offline versions
+                # too): the monitor's RCA joins anomaly windows against it
+                self._emit("policy_swap", {"from_step": prior_step,
+                                           "to_step": rec["step"],
+                                           "candidate_score": round(cand, 6),
+                                           "incumbent_score": round(inc, 6)})
                 # the new incumbent IS the candidate just scored
                 self._inc_score = ((self.serving_step, inc_key[1]), cand)
         else:

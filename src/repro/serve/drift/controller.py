@@ -181,6 +181,24 @@ class DriftController:
         self._sched.schedule_barrier(self._refresh_task(dec.tables),
                                      label=f"re-analyze:{','.join(dec.tables)}")
 
+    def note_external_evidence(self, tables, now: float,
+                               reason: str = "") -> tuple:
+        """Opt-in alert path (serve.obs.AlertHooks): an external monitor
+        attributed a live regression to stale stats on `tables` —
+        schedule an immediate re-ANALYZE barrier for them, bypassing the
+        RefreshPolicy's thresholds/budget (the policy prices routine
+        maintenance; an attributed incident has already paid for it).
+        Returns the tables actually scheduled."""
+        avail = tuple(t for t in sorted(set(tables))
+                      if t not in self._pending and t in self._sched.db.tables)
+        if not avail:
+            return ()
+        self._pending.update(avail)
+        self._sched.schedule_barrier(
+            self._refresh_task(avail),
+            label=f"re-analyze[alert]:{','.join(avail)}")
+        return avail
+
     def _refresh_task(self, tables):
         def task(sched, t_apply: float):
             modeled_total = 0.0

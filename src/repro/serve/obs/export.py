@@ -29,7 +29,7 @@ from typing import Dict, List
 from repro.serve.obs.trace import SCHEMA_VERSION, Tracer
 
 __all__ = ["chrome_trace", "write_chrome_trace", "write_trace_jsonl",
-           "validate_trace_jsonl", "SCHEMA_VERSION"]
+           "load_trace_jsonl", "validate_trace_jsonl", "SCHEMA_VERSION"]
 
 _LINE_FIELDS = {
     "header": ("schema_version", "n_spans", "n_events", "n_samples",
@@ -101,6 +101,28 @@ def write_trace_jsonl(tracer: Tracer, path: str) -> str:
         for d in tracer.flight.dumps:
             f.write(json.dumps(d) + "\n")
     return path
+
+
+def load_trace_jsonl(path: str) -> Dict:
+    """Inverse of `write_trace_jsonl`: parse an export back into
+    {"header", "spans", "events", "samples", "hists", "dumps"} of raw
+    dicts (the "type" tag stripped). Values survive bit-exact: the writer
+    rounds before serializing, so load(write(x)) == the in-memory rows —
+    pinned by tests/test_obs.py."""
+    out: Dict = {"header": None, "spans": [], "events": [], "samples": [],
+                 "hists": [], "dumps": []}
+    with open(path) as f:
+        for raw in f:
+            raw = raw.strip()
+            if not raw:
+                continue
+            obj = json.loads(raw)
+            t = obj.pop("type", None)
+            if t == "header":
+                out["header"] = obj
+            elif t in ("span", "event", "sample", "hist", "dump"):
+                out[t + "s"].append(obj)
+    return out
 
 
 def validate_trace_jsonl(path: str) -> List[str]:

@@ -182,6 +182,7 @@ class Tracer:
         self._live: Dict[int, _Attempt] = {}      # lane idx -> open attempt
         self._closed: Dict[int, List[_Attempt]] = {}   # seq -> archived
         self._backoffs: Dict[int, List[Dict]] = {}     # seq -> retry waits
+        self._by_seq: Dict[int, List[Span]] = {}       # seq -> its spans
 
     # -------------------------------------------------------------- attach
     def attach(self, scheduler) -> None:
@@ -287,6 +288,7 @@ class Tracer:
 
     def _add(self, span: Span) -> Span:
         self.spans.append(span)
+        self._by_seq.setdefault(span.seq, []).append(span)
         self.flight.record(span.as_dict())
         return span
 
@@ -387,7 +389,8 @@ class Tracer:
 
     # ------------------------------------------------------------- queries
     def query_spans(self, seq: int) -> List[Span]:
-        return [s for s in self.spans if s.seq == seq]
+        # indexed: the monitor reads every completion's span tree inline
+        return list(self._by_seq.get(seq, ()))
 
     def roots(self) -> List[Span]:
         return [s for s in self.spans if s.cat == "query"]
@@ -402,6 +405,7 @@ class Tracer:
         self._live.clear()
         self._closed.clear()
         self._backoffs.clear()
+        self._by_seq.clear()
         self.flight.reset()
         self.metrics.reset()
         self.now = 0.0

@@ -101,6 +101,18 @@ class PolicyBreaker:
             return
         self._trip(comp.seq, reason)
 
+    def note_external_evidence(self, seq: int, reason: str) -> bool:
+        """Opt-in alert path (serve.obs.AlertHooks): an external monitor
+        attributed a live regression to the watched swap — trip NOW
+        instead of waiting for `min_post` completions. Ignored (returns
+        False) when no swap is under watch or a trip is already cooling
+        down, so spurious alerts cannot roll back a policy the breaker
+        is not even suspicious of."""
+        if self._watched_step is None or self._cooldown_left > 0:
+            return False
+        self._trip(seq, f"external evidence: {reason}")
+        return True
+
     def _trip(self, seq: int, reason: str) -> None:
         bad = self._watched_step
         obs = getattr(self._sched, "obs", None)

@@ -87,7 +87,14 @@ class FaultInjector:
                  slow_factor: Tuple[float, float] = (8.0, 32.0),
                  fault_frac: float = 0.5,
                  p_corrupt: float = 0.0, corrupt_factor: float = 0.02,
+                 window: Optional[Tuple[int, int]] = None,
                  enabled: bool = True):
+        """`window=(lo, hi)` confines every draw to stream positions
+        lo <= seq < hi — a seeded fault BURST (an outage with a start and
+        an end) instead of a uniform storm. Queries outside the window
+        see an inert injector, and the counter-based keying means the
+        in-window schedule is unchanged by the gate. Default None keeps
+        the PR-6 uniform behavior bit-identical."""
         assert p_crash + p_transient <= 1.0
         self.seed = int(seed)
         self.p_crash, self.p_transient = p_crash, p_transient
@@ -95,6 +102,8 @@ class FaultInjector:
         self.slow_factor = slow_factor
         self.fault_frac = fault_frac
         self.p_corrupt, self.corrupt_factor = p_corrupt, corrupt_factor
+        self.window = None if window is None else (int(window[0]),
+                                                   int(window[1]))
         self.enabled = enabled
         self.log: List[FaultEvent] = []      # events that actually FIRED
 
@@ -106,6 +115,10 @@ class FaultInjector:
     def _rng(self, kind_tag: int, seq: int, attempt: int, k: int = 0):
         return np.random.default_rng(
             (self.seed, kind_tag, seq, attempt, k))
+
+    def _in_window(self, seq: int) -> bool:
+        return self.window is None or \
+            self.window[0] <= seq < self.window[1]
 
     # ---------------------------------------------------------- sampling
     def run_faults(self, seq: int, attempt: int) -> Optional[RunFaults]:
@@ -120,7 +133,8 @@ class FaultInjector:
 
     def run_slowdown(self, seq: int, attempt: int) -> float:
         """Straggler multiplier for this attempt (1.0 = healthy)."""
-        if not (self.enabled and self.p_slow > 0):
+        if not (self.enabled and self.p_slow > 0) \
+                or not self._in_window(seq):
             return 1.0
         rng = self._rng(_K_RUN, seq, attempt)
         if rng.random() >= self.p_slow:
@@ -131,7 +145,8 @@ class FaultInjector:
     def stage_fault(self, seq: int, attempt: int, k: int) \
             -> Optional[FaultEvent]:
         """Crash/transient decision for the k-th charge of an attempt."""
-        if not (self.enabled and (self.p_crash > 0 or self.p_transient > 0)):
+        if not (self.enabled and (self.p_crash > 0 or self.p_transient > 0)) \
+                or not self._in_window(seq):
             return None
         u = float(self._rng(_K_STAGE, seq, attempt, k).random())
         if u < self.p_crash:
@@ -147,7 +162,8 @@ class FaultInjector:
         """Stats-corruption decision at a first-attempt admission: scale
         the believed nrows of one of the query's tables (sorted order, so
         the pick is stream-independent)."""
-        if not (self.enabled and self.p_corrupt > 0) or not tables:
+        if not (self.enabled and self.p_corrupt > 0) or not tables \
+                or not self._in_window(seq):
             return None
         rng = self._rng(_K_ADMIT, seq, 0)
         if rng.random() >= self.p_corrupt:

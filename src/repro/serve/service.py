@@ -55,6 +55,9 @@ class TenantStats:
     failure_kinds: Optional[Dict[str, int]] = None  # failed, by kind
     n_recovered: int = 0              # succeeded after >=1 failed attempt
     n_hedged: int = 0                 # resolved through a hedge race
+    # ---- SLO watchdog (serve.obs.monitor; 0 unless a monitor is attached)
+    n_anomalies: int = 0              # detector alerts on this tenant's series
+    n_incidents: int = 0              # incidents opened on this tenant
 
     def as_dict(self) -> Dict:
         return _round_floats(dataclasses.asdict(self))
@@ -88,6 +91,9 @@ class ServiceStats:
     n_retried: int = 0               # completions that needed >1 attempt
     n_recovered: int = 0             # succeeded after >=1 failed attempt
     n_hedged: int = 0                # resolved through a hedge race
+    # ---- SLO watchdog totals (serve.obs.monitor) ------------------------
+    n_anomalies: int = 0             # detector alerts, all series
+    n_incidents: int = 0             # incidents opened
 
     def as_dict(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -118,7 +124,7 @@ class QueryService:
                  cache_bytes: int = 256 * 1024 * 1024,
                  reuse_stages: bool = True, explore: bool = False,
                  hooks: Sequence = (), tenants=None, admission=None,
-                 recovery=None, obs=None):
+                 recovery=None, obs=None, monitor=None):
         """`hooks` are objects with an `attach(scheduler)` method (e.g. the
         lifelong-learning loop's `learn.TrajectoryHarvester` /
         `learn.BackgroundLearner`); each is attached to every scheduler
@@ -135,7 +141,11 @@ class QueryService:
         control plane in the same way. `obs` (a `serve.obs.Tracer`)
         attaches the observability plane — BEFORE the hooks, so hook
         attach seams (learner/breaker) can wire their own emit paths to
-        it. All None = the PR-2 path, bit-identical."""
+        it. `monitor` (a `serve.obs.SloMonitor`) attaches the online SLO
+        watchdog AFTER the hooks — it reads each completion's assembled
+        span tree, so the tracer (auto-created when `obs` is None) must
+        observe first. All None = the PR-2 path, bit-identical; a monitor
+        with alerts unwired keeps completions bit-identical too."""
         self.db = db
         self.agent = agent
         self.est = est if est is not None else Estimator(db, db.stats)
@@ -147,7 +157,11 @@ class QueryService:
         self.tenants = tenants
         self.admission = admission
         self.recovery = recovery
+        if monitor is not None and obs is None:
+            from repro.serve.obs import Tracer
+            obs = Tracer()
         self.obs = obs
+        self.monitor = monitor
         if reuse_stages:
             if tenants is not None:
                 # every REGISTERED tenant gets its own partition (explicit
@@ -177,7 +191,13 @@ class QueryService:
             self.obs.attach(self.scheduler)
         for h in self.hooks:
             h.attach(self.scheduler)
+        if self.monitor is not None:
+            # last attacher: the monitor consumes the span trees the
+            # tracer's own on_complete assembles
+            self.monitor.attach(self.scheduler)
         comps = self.scheduler.run(list(stream))
+        if self.monitor is not None:
+            self.monitor.finalize()
         return comps, self._stats(comps)
 
     def reset_stats(self, *, clear_entries: bool = False) -> None:
@@ -200,6 +220,10 @@ class QueryService:
             # accumulate across run() calls — same discipline as the
             # cache counters above
             self.obs.reset()
+        if self.monitor is not None:
+            # detector baselines, anomaly/incident history and the
+            # plan-provenance ledger accumulate the same way
+            self.monitor.reset()
 
     def run_queries(self, queries: Sequence, *, seeds=None) \
             -> Tuple[List[Completion], ServiceStats]:
@@ -232,6 +256,8 @@ class QueryService:
             n_miss, miss_rate = _slo_counts(cs)
             lat = np.asarray([c.latency for c in cs]) if cs else None
             part = parts.get(name)
+            n_anom, n_inc = self.monitor.tenant_counts(name) \
+                if self.monitor is not None else (0, 0)
             out[name] = TenantStats(
                 n_completed=len(cs),
                 n_failed=sum(c.result.failed for c in cs),
@@ -246,7 +272,8 @@ class QueryService:
                 cache=part.stats.as_dict() if part is not None else None,
                 failure_kinds=_failure_kinds(cs) or None,
                 n_recovered=sum(c.recovered for c in cs),
-                n_hedged=sum(c.hedged for c in cs))
+                n_hedged=sum(c.hedged for c in cs),
+                n_anomalies=n_anom, n_incidents=n_inc)
         return out
 
     def _stats(self, comps: List[Completion]) -> ServiceStats:
@@ -265,6 +292,8 @@ class QueryService:
         first = min(c.arrival_t for c in comps)
         makespan = max(c.finish_t for c in comps) - first
         n_miss, miss_rate = _slo_counts(comps)
+        n_anom, n_inc = self.monitor.totals() \
+            if self.monitor is not None else (0, 0)
         return ServiceStats(
             n_completed=len(comps),
             n_failed=sum(c.result.failed for c in comps),
@@ -290,4 +319,5 @@ class QueryService:
             attempts_total=sum(c.attempts for c in comps),
             n_retried=sum(c.attempts > 1 for c in comps),
             n_recovered=sum(c.recovered for c in comps),
-            n_hedged=sum(c.hedged for c in comps))
+            n_hedged=sum(c.hedged for c in comps),
+            n_anomalies=n_anom, n_incidents=n_inc)

@@ -269,6 +269,55 @@ def test_span_tree_invariants_under_chaos(job_workload, agent, seed):
     assert not any(e.kind == "attempt_mismatch" for e in tracer.events)
 
 
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_monitor_on_is_completion_bit_identical_under_chaos(job_workload,
+                                                            agent, seed):
+    """The watchdog only watches: over random seeded chaos worlds, a
+    tracer + SloMonitor (alerts unwired) must not move a single
+    completion — detectors, RCA and incident bookkeeping all run off the
+    observation stream, never into the scheduler."""
+    from scenarios import FixedPredictor
+    from repro.serve.obs import MonitorConfig, SloMonitor, Tracer
+    from repro.serve.recover import (FaultInjector, HedgePolicy,
+                                     RecoveryManager, RetryPolicy)
+
+    rng = np.random.default_rng(700 + seed)
+    stream = _random_stream(rng, n_queries=14, n_deltas=2)
+    n_lanes = int(rng.integers(2, 5))
+
+    def serve(monitored):
+        db = fresh_db(scale=0.05, seed=seed)
+        mgr = RecoveryManager(
+            injector=FaultInjector(seed=900 + seed, p_crash=0.05,
+                                   p_transient=0.25, p_slow=0.2,
+                                   p_corrupt=0.1),
+            retry=RetryPolicy(max_attempts=3, backoff=0.2),
+            hedge=HedgePolicy(factor=4.0, predictor=FixedPredictor()))
+        sched = LaneScheduler(db, Estimator(db, db.stats), agent,
+                              n_lanes=n_lanes, recovery=mgr)
+        mon = None
+        if monitored:
+            Tracer().attach(sched)
+            mon = SloMonitor(config=MonitorConfig(window=6, min_warm=3,
+                                                  min_n=4, cooldown=3,
+                                                  merge_gap=6, lookback=8))
+            mon.attach(sched)
+        comps = sched.run(stream)
+        if mon is not None:
+            mon.finalize()
+        return comps, mon
+
+    def sig(comps):
+        return [(c.seq, c.admit_t, c.finish_t, c.lane, c.attempts,
+                 c.hedged, c.result.failed, c.result.latency)
+                for c in comps]
+
+    plain, _ = serve(False)
+    watched, mon = serve(True)
+    assert sig(plain) == sig(watched)
+    assert len(mon.records) == len(watched)   # it did watch everything
+
+
 # ------------------------------------------------------ cache accounting
 def _check_partition(c):
     assert c.bytes == sum(nb for _, nb in c._entries.values())

@@ -12,8 +12,8 @@ from scenarios import FixedPredictor, fresh_db, qos_setup, qos_stream
 from repro.serve.obs import MetricsRegistry, Tracer
 from repro.serve.obs.explain import (PHASES, diff_profiles, phases_for,
                                      run_profile)
-from repro.serve.obs.export import (chrome_trace, validate_trace_jsonl,
-                                    write_trace_jsonl)
+from repro.serve.obs.export import (chrome_trace, load_trace_jsonl,
+                                    validate_trace_jsonl, write_trace_jsonl)
 from repro.serve.recover import (FaultInjector, HedgePolicy, RecoveryManager,
                                  RetryPolicy)
 from repro.serve.service import QueryService
@@ -136,14 +136,15 @@ def test_service_stats_as_dict_round_trips(job_workload, agent):
         "mean_decide_batch", "hook_seconds", "queue_wait_mean",
         "queue_wait_p99", "n_rejected", "n_degraded", "n_slo_miss",
         "slo_miss_rate", "per_tenant", "failure_kinds", "attempts_total",
-        "n_retried", "n_recovered", "n_hedged"}
+        "n_retried", "n_recovered", "n_hedged", "n_anomalies",
+        "n_incidents"}
     assert set(d["per_tenant"]) == {"gold", "bulk"}
     for td in d["per_tenant"].values():
         assert set(td) >= {
             "n_completed", "n_failed", "n_rejected", "n_degraded",
             "n_slo_miss", "slo_miss_rate", "qps", "latency_p50",
             "latency_p99", "queue_wait_mean", "cache", "failure_kinds",
-            "n_recovered", "n_hedged"}
+            "n_recovered", "n_hedged", "n_anomalies", "n_incidents"}
     td = stats.per_tenant["gold"].as_dict()
     assert td == json.loads(json.dumps(td))
 
@@ -177,6 +178,35 @@ def test_export_round_trip_and_validation(job_workload, agent, tmp_path):
     n_x = sum(e["ph"] == "X" for e in evs)
     assert n_x == len(tracer.spans)      # zero-width hooks included
     assert sum(e["ph"] == "i" for e in evs) == len(tracer.events)
+
+
+def test_load_trace_jsonl_round_trips_bit_exact(job_workload, agent,
+                                                tmp_path):
+    """`load_trace_jsonl` is write's exact inverse: the writer rounds
+    before serializing, so metric sample rows come back == the in-memory
+    series (bit-exact floats), and span/event/dump records match their
+    as_dict forms modulo JSON normalization."""
+    tracer = Tracer()
+    _serve(agent, 7, obs=tracer)
+    path = str(tmp_path / "trace.jsonl")
+    write_trace_jsonl(tracer, path)
+    loaded = load_trace_jsonl(path)
+
+    assert loaded["samples"] == tracer.metrics.series   # THE bit-exact claim
+    norm = lambda rows: json.loads(json.dumps(rows))
+
+    def strip(d):
+        return {k: v for k, v in d.items() if k != "type"}
+
+    assert loaded["spans"] == norm([strip(s.as_dict())
+                                    for s in tracer.spans])
+    assert loaded["events"] == norm([strip(e.as_dict())
+                                     for e in tracer.events])
+    assert loaded["dumps"] == norm([strip(d) for d in tracer.flight.dumps])
+    h = loaded["header"]
+    assert (h["n_spans"], h["n_events"], h["n_samples"], h["n_dumps"]) == \
+        (len(loaded["spans"]), len(loaded["events"]),
+         len(loaded["samples"]), len(loaded["dumps"]))
 
 
 # -------------------------------------------------------------- explainer
