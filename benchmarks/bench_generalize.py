@@ -1,0 +1,213 @@
+"""Cross-schema generalization benchmark: train on one sampled schema
+family, serve a DISJOINT family — feeds results/BENCH_generalize.json.
+
+The world generator (`repro.gen`) samples two worlds from different
+schema families (star -> person by default): different table names,
+arities, skews and FK shapes, so the serving policy meets queries whose
+table-identity bits are all zero in its encoding (the paper's unseen-
+table story, §V-B2) and whose join structures it never trained on. The
+agent first ADAPTS online over world A's delta/tenant stream; the
+post-adaptation parameters are snapshotted and then serve world B's
+stream three ways on identical fresh databases:
+
+  cbo     CboReplanAgent — scripted re-plan-at-admission baseline; its
+          plans are a pure function of B's catalog, so it prices world
+          B's intrinsic hardness and NORMALIZES the learned arms
+          (cross-family latency scales differ by construction);
+  frozen  the world-A parameters, learning off: what pure policy
+          transfer is worth on a schema the agent has never seen;
+  online  the same parameters plus the full PR-3 loop (harvest,
+          prioritized replay, background PPO, gated hot-swap, adaptive
+          curriculum): re-adaptation closing the gap live.
+
+Reported gap metrics (all from virtual-clock latencies):
+
+  frozen_gap_p99 = frozen_p99 / cbo_p99 - 1   on world B
+  online_gap_p99 = online_p99 / cbo_p99 - 1   on world B
+  gap_closed     = frozen_gap - online_gap (positive: adaptation helped)
+
+Gates (full run): the frozen pass is bit-deterministic across two runs
+(the generator's worlds are a pure function of the seed, so the whole
+serve is), and online p99 is no worse than 5% over frozen p99 — online
+re-adaptation must never make cross-schema serving materially worse.
+Smoke gates only determinism.
+
+  PYTHONPATH=src python -m benchmarks.bench_generalize [--smoke]
+"""
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import (bench_args, bench_logger, csv_line,
+                               emit_bench_json)
+
+log = bench_logger("generalize")
+
+FAMILY_A, FAMILY_B = "star", "person"
+SEED_A, SEED_B = 101, 202
+
+
+def _world(seed, family, args, *, with_stream=True):
+    """Re-materializing a world == a fresh identical database (deltas in
+    a serving pass mutate it, so every pass re-samples)."""
+    from repro.gen.world import sample_world
+    return sample_world(
+        seed, family=family,
+        scale=0.04 if args.smoke else 0.07,
+        n_templates=4 if args.smoke else 8,
+        n_train=8 if args.smoke else 24,
+        n_test_per_template=1,
+        t_min=3, t_max=4 if args.smoke else 5,
+        n_queries=12 if args.smoke else 72,
+        with_stream=with_stream)
+
+
+def _serve(world, agent, stream, *, lanes, explore=False, hooks=()):
+    from repro.serve.service import QueryService
+    from repro.sql.cbo import Estimator
+    svc = QueryService(world.db, agent, est=Estimator(world.db,
+                                                      world.db.stats),
+                       n_lanes=lanes, policy="async", explore=explore,
+                       hooks=list(hooks))
+    t0 = time.perf_counter()
+    comps, stats = svc.run(stream)
+    return comps, stats, time.perf_counter() - t0
+
+
+def _pcts(comps):
+    lat = np.asarray([c.latency for c in comps])
+    return (float(np.percentile(lat, 50)), float(np.percentile(lat, 99)))
+
+
+def _sig(comps):
+    """Completion signature for the determinism gate."""
+    return [(c.seq, c.admit_t, c.finish_t, tuple(c.traj.actions))
+            for c in comps]
+
+
+def main(argv=None):
+    args = bench_args(argv, lanes=4)
+
+    from repro.baselines import CboReplanAgent
+    from repro.checkpoint import agent_state, copy_tree, install_agent_state
+    from repro.core.agent import AgentConfig, AqoraAgent
+    from repro.core.encoding import WorkloadMeta
+    from repro.learn import (AdaptiveCurriculum, PolicyStore, ReplayBuffer,
+                             make_online_loop)
+
+    wa = _world(SEED_A, FAMILY_A, args)
+    wb = _world(SEED_B, FAMILY_B, args)
+    assert wa.spec.family != wb.spec.family
+    assert not ({t.name for t in wa.spec.tables} &
+                {t.name for t in wb.spec.tables} - {"hub"})
+    # cross-schema encoding context: world A's table identities (world
+    # B's tables all encode as zero bits), action space sized for both
+    meta = WorkloadMeta(wa.meta.table_index,
+                        max(wa.meta.n_tables_max, wb.meta.n_tables_max))
+    log.info(f"== cross-schema generalization: adapt on "
+             f"{wa.spec.name} ({len(wa.spec.tables)} tables), serve "
+             f"{wb.spec.name} ({len(wb.spec.tables)} tables), "
+             f"{sum(a.delta is None for a in wb.stream)} queries / "
+             f"{sum(a.delta is not None for a in wb.stream)} deltas, "
+             f"{args.lanes} lanes ==")
+
+    serving_agent = AqoraAgent(meta, AgentConfig(), seed=0)
+    learner_agent = AqoraAgent(meta, AgentConfig(), seed=1)
+    tmp_root = tempfile.TemporaryDirectory(prefix="bench_generalize_ps_")
+    n_stores = [0]
+
+    def loop_hooks(probe):
+        n_stores[0] += 1
+        store = PolicyStore(f"{tmp_root.name}/store{n_stores[0]}", probe,
+                            mode="gate")
+        return make_online_loop(
+            serving_agent, store=store,
+            curriculum=AdaptiveCurriculum(window=8, min_dwell=8),
+            replay=ReplayBuffer(capacity=256, regret_scale=2.0),
+            update_every=3, sample_size=8, gate_every=2, seed=3,
+            learner_agent=learner_agent)
+
+    # -- adaptation pass: the agent lives on world A's stream
+    comps_a, _, host_a = _serve(wa, serving_agent, wa.stream,
+                                lanes=args.lanes, explore=True,
+                                hooks=loop_hooks(wa.workload.test[:4]))
+    trained = copy_tree(agent_state(serving_agent))
+    p50_a, p99_a = _pcts(comps_a)
+    log.info(f"adapted on {wa.spec.name}: p50={p50_a:.2f}s "
+             f"p99={p99_a:.2f}s host={host_a:.1f}s")
+
+    # -- world B arms (fresh identical db per pass; same stream object
+    #    is safe — the scheduler copies arrivals per run)
+    stream_b = wb.stream
+    rows = {}
+
+    cbo_comps, _, host = _serve(_world(SEED_B, FAMILY_B, args),
+                                CboReplanAgent(meta), stream_b,
+                                lanes=args.lanes)
+
+    def frozen_pass():
+        install_agent_state(serving_agent, trained, copy=True)
+        return _serve(_world(SEED_B, FAMILY_B, args), serving_agent,
+                      stream_b, lanes=args.lanes, explore=False)
+
+    fr_comps, _, fr_host = frozen_pass()
+    fr2_comps, _, _ = frozen_pass()
+    deterministic = _sig(fr_comps) == _sig(fr2_comps)
+
+    install_agent_state(serving_agent, trained, copy=True)
+    install_agent_state(learner_agent, trained, copy=True)
+    on_comps, _, on_host = _serve(_world(SEED_B, FAMILY_B, args),
+                                  serving_agent, stream_b,
+                                  lanes=args.lanes, explore=True,
+                                  hooks=loop_hooks(wb.workload.test[:4]))
+
+    for name, comps, host in (("cbo", cbo_comps, host),
+                              ("frozen", fr_comps, fr_host),
+                              ("online", on_comps, on_host)):
+        p50, p99 = _pcts(comps)
+        rows[name] = {"p50": round(p50, 3), "p99": round(p99, 3),
+                      "failed": int(sum(c.result.failed for c in comps)),
+                      "host_seconds": round(host, 2)}
+        log.info(f"{name:7s} on {wb.spec.name}: p50={p50:7.2f}s "
+                 f"p99={p99:7.2f}s fails={rows[name]['failed']:3d} "
+                 f"host={host:5.1f}s")
+
+    cbo99 = max(rows["cbo"]["p99"], 1e-9)
+    frozen_gap = rows["frozen"]["p99"] / cbo99 - 1.0
+    online_gap = rows["online"]["p99"] / cbo99 - 1.0
+    gap_closed = frozen_gap - online_gap
+    log.info(f"frozen deterministic: {deterministic};  frozen gap "
+             f"{frozen_gap:+.3f};  online gap {online_gap:+.3f};  "
+             f"gap closed {gap_closed:+.3f}")
+
+    ok_online = rows["online"]["p99"] <= 1.05 * rows["frozen"]["p99"]
+    ok = bool(deterministic and (args.smoke or ok_online))
+
+    csv_line("generalize_frozen_gap_p99", 0, f"{frozen_gap:+.3f}")
+    csv_line("generalize_online_gap_p99", 0, f"{online_gap:+.3f}")
+    emit_bench_json({
+        "smoke": args.smoke,
+        "train_world": {"name": wa.spec.name, "family": wa.spec.family,
+                        "n_tables": len(wa.spec.tables),
+                        "adapt_p50": round(p50_a, 3),
+                        "adapt_p99": round(p99_a, 3)},
+        "serve_world": {"name": wb.spec.name, "family": wb.spec.family,
+                        "n_tables": len(wb.spec.tables),
+                        "n_queries": sum(a.delta is None
+                                         for a in stream_b),
+                        "n_deltas": sum(a.delta is not None
+                                        for a in stream_b)},
+        **rows,
+        "frozen_deterministic": deterministic,
+        "frozen_gap_p99": round(frozen_gap, 3),
+        "online_gap_p99": round(online_gap, 3),
+        "gap_closed_p99": round(gap_closed, 3),
+        "gates_ok": ok,
+    }, name="BENCH_generalize.json")
+    tmp_root.cleanup()
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if main() else 1)

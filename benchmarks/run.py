@@ -19,16 +19,17 @@ def main() -> None:
     from benchmarks import (bench_ablation_actions, bench_ablation_net,
                             bench_ablation_rl, bench_ablation_strategy,
                             bench_cbo_cost, bench_delta_table, bench_drift,
-                            bench_dynamic, bench_faults, bench_kernels,
-                            bench_monitor, bench_obs, bench_online,
-                            bench_qos, bench_query_perf, bench_roofline,
-                            bench_serve, bench_tails)
+                            bench_dynamic, bench_faults, bench_generalize,
+                            bench_kernels, bench_monitor, bench_obs,
+                            bench_online, bench_qos, bench_query_perf,
+                            bench_roofline, bench_serve, bench_tails)
     ran, missing = [], []
     for mod in (bench_query_perf, bench_serve, bench_online, bench_qos,
                 bench_drift, bench_faults, bench_delta_table, bench_tails,
-                bench_dynamic, bench_ablation_rl, bench_ablation_net,
-                bench_ablation_strategy, bench_ablation_actions,
-                bench_cbo_cost, bench_roofline, bench_kernels):
+                bench_dynamic, bench_generalize, bench_ablation_rl,
+                bench_ablation_net, bench_ablation_strategy,
+                bench_ablation_actions, bench_cbo_cost, bench_roofline,
+                bench_kernels):
         name = mod.__name__.split(".")[-1]
         try:
             ok = mod.main()

@@ -34,7 +34,9 @@ class AdaptiveCurriculum:
                  promote_success: float = 0.9,
                  promote_p50: Optional[float] = None,
                  min_dwell: int = 16,
-                 demote_success: Optional[float] = None):
+                 demote_success: Optional[float] = None,
+                 drift_demote_threshold: Optional[float] = None,
+                 drift_cooldown: Optional[int] = None):
         """window           rolling completion window the thresholds see
         promote_success  fraction of window completions that must succeed
         promote_p50      optional ceiling on the window's p50 latency (s)
@@ -44,6 +46,17 @@ class AdaptiveCurriculum:
                          that re-restricts the action space (and, via the
                          learner's explore gating, re-opens exploration)
                          when drift starts failing queries
+        drift_demote_threshold
+                         optional `DriftDetector` peak-score trigger for
+                         `note_drift`: demote PROACTIVELY on attributed
+                         drift (catalog lag, regret, prediction error)
+                         rather than waiting for a window of failures —
+                         the success-rate governor is reactive; this one
+                         re-restricts the action space as soon as the
+                         detector says the world moved
+        drift_cooldown   completions between drift demotions (default:
+                         `window`), so one sustained drift episode costs
+                         at most one stage per window
         """
         assert 1 <= start_stage <= 3
         self.stage = start_stage
@@ -52,11 +65,16 @@ class AdaptiveCurriculum:
         self.promote_p50 = promote_p50
         self.min_dwell = min_dwell
         self.demote_success = demote_success
+        self.drift_demote_threshold = drift_demote_threshold
+        self.drift_cooldown = window if drift_cooldown is None \
+            else drift_cooldown
+        self._last_drift_demote = -(1 << 30)
         self._window: Deque[Tuple[bool, float]] = deque(maxlen=window)
         self._dwell = 0
         self.n_observed = 0
         self.promotions: List[int] = []    # completion counts at promotion
         self.demotions: List[int] = []     #   ... and at demotion
+        self.drift_demotions: List[int] = []  # subset driven by note_drift
 
     def observe(self, comp) -> int:
         """Fold one scheduler Completion in; returns the (possibly just
@@ -78,6 +96,29 @@ class AdaptiveCurriculum:
             self._window.clear()
         return self.stage
 
+    def note_drift(self, peak_score: float) -> bool:
+        """Detector-driven demotion (wired by `drift.DriftController`):
+        when the peak per-table drift score crosses the configured
+        threshold, drop one stage immediately — stale-stats drift makes
+        the aggressive action families the riskiest exactly when the
+        track record that earned them stops being evidence. Window and
+        dwell reset, so re-promotion must be re-earned on post-drift
+        traffic. Returns True when a demotion fired."""
+        if self.drift_demote_threshold is None or \
+                peak_score < self.drift_demote_threshold:
+            return False
+        if self.stage <= 1 or \
+                self.n_observed - self._last_drift_demote < \
+                self.drift_cooldown:
+            return False
+        self.stage -= 1
+        self.demotions.append(self.n_observed)
+        self.drift_demotions.append(self.n_observed)
+        self._last_drift_demote = self.n_observed
+        self._dwell = 0
+        self._window.clear()
+        return True
+
     def _success_rate(self) -> float:
         return float(np.mean([s for s, _ in self._window]))
 
@@ -96,4 +137,5 @@ class AdaptiveCurriculum:
     def stats(self) -> dict:
         return {"stage": self.stage, "observed": self.n_observed,
                 "promotions": list(self.promotions),
-                "demotions": list(self.demotions)}
+                "demotions": list(self.demotions),
+                "drift_demotions": list(self.drift_demotions)}

@@ -60,6 +60,7 @@ class DriftStats:
     analyze_wall_s: float = 0.0        # measured host cost (reported only)
     refits: int = 0
     probe_resamples: int = 0
+    curriculum_demotions: int = 0      # stage drops via note_drift
     host_seconds: float = 0.0          # controller's own on_complete cost
 
     def as_dict(self) -> Dict:
@@ -74,6 +75,7 @@ class DriftController:
                  policy: Optional[RefreshPolicy] = None,
                  replay=None, predictor=None, store=None,
                  probes: Optional[CoverageProbeSet] = None,
+                 curriculum=None,
                  refit_threshold: float = 1.0, refit_every: int = 8,
                  refit_samples: int = 64, refit_epochs: int = 2,
                  probe_threshold: float = 1.0,
@@ -82,15 +84,21 @@ class DriftController:
         """`replay` is the PR-3 `learn.ReplayBuffer` (regret source and the
         refit training set); `predictor` the QoS `LatencyPredictor` (error
         source and refit target); `store` the `learn.PolicyStore` whose
-        probe set `probes` re-covers. All four are optional: the detector
-        scores from catalog lag alone when evidence sources are absent,
-        and actuators without their dependency simply stay off."""
+        probe set `probes` re-covers; `curriculum` an
+        `learn.AdaptiveCurriculum` (with `drift_demote_threshold` set)
+        that gets the peak drift score per completion — the fourth
+        actuator: detector-attributed drift demotes the serving stage
+        (share the instance with the `BackgroundLearner`, which copies
+        `stage` onto the scheduler between ticks). All are optional: the
+        detector scores from catalog lag alone when evidence sources are
+        absent, and actuators without their dependency simply stay off."""
         self.detector = detector if detector is not None else DriftDetector()
         self.policy = policy if policy is not None else RefreshPolicy("never")
         self.replay = replay
         self.predictor = predictor
         self.store = store
         self.probes = probes
+        self.curriculum = curriculum
         assert probes is None or store is not None, \
             "probe coverage needs a PolicyStore to install the set on"
         self.refit_threshold = refit_threshold
@@ -150,11 +158,12 @@ class DriftController:
         # target, no probe pool) scoring the catalog per completion is
         # pure serving-path overhead — scores() stays available on demand
         if self.policy.kind != "never" or self.predictor is not None \
-                or self.probes is not None:
+                or self.probes is not None or self.curriculum is not None:
             drifts = self.detector.score(self._sched.db)
             self._maybe_refresh(drifts, comp.finish_t)
             self._maybe_refit(drifts)
             self._maybe_recover_probes(drifts)
+            self._maybe_demote_curriculum(drifts)
         self.stats.host_seconds += time.perf_counter() - t0
 
     def _on_delta(self, t_apply: float, delta) -> None:
@@ -263,6 +272,18 @@ class DriftController:
             self._sched.obs.event("predictor_refit",
                                   {"peak_score": round(peak, 6),
                                    "n_refits": self.predictor.n_refits})
+
+    def _maybe_demote_curriculum(self, drifts) -> None:
+        if self.curriculum is None:
+            return
+        peak = max((d.score for d in drifts.values()), default=0.0)
+        if self.curriculum.note_drift(peak):
+            self.stats.curriculum_demotions += 1
+            if getattr(self._sched, "obs", None) is not None:
+                self._sched.obs.event(
+                    "curriculum_demote",
+                    {"peak_score": round(peak, 6),
+                     "stage": self.curriculum.stage})
 
     def _maybe_recover_probes(self, drifts) -> None:
         if self.probes is None:

@@ -10,13 +10,21 @@ table with a `production_year` column so the paper's dynamic evaluation
 Scale is set so that plan-choice effects dominate: bad join orders produce
 million-row intermediates (OOM/timeout territory under the cluster cost
 model) while good orders stay in the thousands.
-"""
+
+Materialization is spec-driven: `make_db_from_spec` interprets any
+`repro.gen.spec.SchemaSpec` (the seeded schema sampler's output), and the
+hand-built worlds are thin instances — `JOB_SPEC`/`STACK_SPEC` plus the
+same interpreter, bit-identical at fixed seeds to the original inline
+builders (pinned by tests/test_gen.py)."""
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Optional
 
 import numpy as np
 
+from repro.gen.spec import (SchemaSpec, TableSpec, cat, cat2, fk, id_col,
+                            spec_rows)
 from repro.sql.catalog import Database, Table, analyze
 
 
@@ -36,83 +44,208 @@ def _uniform_fk(rng, n, n_parent):
     return rng.integers(0, n_parent, size=n, dtype=np.int64)
 
 
+# ------------------------------------------------------ spec interpreter
+def _realized_rows(spec: SchemaSpec, t: TableSpec, scale: float,
+                   realized: Dict[str, int]) -> int:
+    """Row count of `t` after scale + size_with cascades (`realized` maps
+    already-materialized tables to their actual row counts)."""
+    n = spec_rows(t, scale)
+    if t.size_with:
+        base = spec_rows(spec.table(t.size_with), scale)
+        actual = realized[t.size_with]
+        if actual != base:         # a snapshot filter shrank the parent
+            n = max(16, int(n * actual / base))
+    return n
+
+
+def _draw_column(col, n: int, rng: np.random.Generator, cols: Dict,
+                 tables: Dict[str, Dict],
+                 realized: Dict[str, int]) -> np.ndarray:
+    """One column's numpy draw — the spec grammar's entire runtime. FK
+    domain sizes come from `realized` row counts (spec arithmetic), so a
+    draw never needs its parent MATERIALIZED — only `via` gathers read
+    parent columns, and validation pins those parents earlier."""
+    if col.kind == "id":
+        return np.arange(n, dtype=np.int64)
+    if col.kind == "cat":
+        return rng.integers(col.lo, col.hi, n).astype(np.int64)
+    if col.kind == "cat2":
+        src = cols[col.src]
+        hi = rng.integers(0, col.hi_k, n)
+        lo = rng.integers(0, col.lo_k, n)
+        return np.where(src > col.threshold, hi, lo).astype(np.int64)
+    if col.kind == "fk":
+        keys = _zipf_fk(rng, n, realized[col.parent], a=col.a) if col.skew \
+            else _uniform_fk(rng, n, realized[col.parent])
+        if col.via:
+            gathered = tables[col.parent].get(col.via)
+            assert gathered is not None, \
+                f"via gather {col.parent}.{col.via} not materialized yet"
+            return gathered[keys]
+        return keys
+    raise ValueError(col.kind)
+
+
+def materialize_table(spec: SchemaSpec, t: TableSpec, n: int,
+                      rng: np.random.Generator,
+                      tables: Optional[Dict[str, Dict]] = None,
+                      realized: Optional[Dict[str, int]] = None
+                      ) -> Dict[str, np.ndarray]:
+    """All of one table's columns: draws follow the hoist order (columns
+    with `order` set first), the returned dict keeps spec column order."""
+    cols: Dict[str, np.ndarray] = {c.name: None for c in t.columns}
+    hoisted = sorted((c for c in t.columns if c.order is not None),
+                     key=lambda c: c.order)
+    for c in hoisted + [c for c in t.columns if c.order is None]:
+        cols[c.name] = _draw_column(c, n, rng, cols, tables or {},
+                                    realized or {})
+    return cols
+
+
+def make_db_from_spec(spec: SchemaSpec, *, scale: float = 1.0, seed: int = 0,
+                      rng: Optional[np.random.Generator] = None,
+                      overrides: Optional[Dict[str, Dict]] = None,
+                      name: Optional[str] = None,
+                      analyze_seed: Optional[int] = None) -> Database:
+    """Materialize a `SchemaSpec` into a `Database`.
+
+    The draw sequence is table-major/column-minor in spec order, except
+    columns with `order` set, which are hoisted to the front (sorted by
+    `order`) — `fk` parent sizes come from the spec arithmetic, so a
+    hoisted draw never needs an unmaterialized table, only `via` gathers
+    do (validated by `spec.assert_valid`). `overrides` supplies
+    precomputed column dicts (snapshot-filtered roots): overridden tables
+    consume NO draws and downstream `size_with` cascades see their
+    realized row count. Passing a live `rng` continues an existing
+    stream (the hand-built builders draw their root first, filter, then
+    hand the rng over); `analyze_seed` defaults to ``seed + 1`` — the
+    hand-built worlds' statistics seed."""
+    rng = rng if rng is not None else np.random.default_rng(seed)
+    overrides = overrides or {}
+    realized: Dict[str, int] = {}
+    out: Dict[str, Dict[str, np.ndarray]] = {}
+    plan = []                       # (table, column, n) draw steps
+    for t in spec.tables:
+        if t.name in overrides:
+            out[t.name] = dict(overrides[t.name])
+            realized[t.name] = len(next(iter(out[t.name].values())))
+            continue
+        # pre-populate in spec column order: hoisting reorders only the
+        # DRAWS below, never where a column lands in the table dict
+        out[t.name] = {c.name: None for c in t.columns}
+        n = _realized_rows(spec, t, scale, realized)
+        realized[t.name] = n
+        for c in t.columns:
+            plan.append((t.name, c, n))
+    hoisted = sorted((s for s in plan if s[1].order is not None),
+                     key=lambda s: s[1].order)
+    for tname, c, n in hoisted + [s for s in plan if s[1].order is None]:
+        out[tname][c.name] = _draw_column(c, n, rng, out[tname], out,
+                                          realized)
+    db = Database(name=name if name is not None else spec.name,
+                  tables={t.name: Table(t.name, out[t.name])
+                          for t in spec.tables})
+    db.stats = analyze(db, rng=np.random.default_rng(
+        seed + 1 if analyze_seed is None else analyze_seed))
+    return db
+
+
+# ------------------------------------------------------ hand-built specs
+def _fact(name: str, n: int, *extra, skew: bool = True) -> TableSpec:
+    """JOB-like movie-fact table: Zipf movie_id into title + extras,
+    shrinking with title under snapshot filters."""
+    return TableSpec(name, n, (fk("movie_id", "title", skew=skew),) + extra,
+                     size_with="title")
+
+
+JOB_SPEC = SchemaSpec("job", (
+    TableSpec("title", 60_000, (
+        id_col(),
+        # year drawn FIRST (order=0) even though kind_id precedes it in
+        # column order — cat2 skews newer movies to kinds 0/1
+        cat2("kind_id", "production_year", 1990, 3, 7),
+        dataclasses.replace(cat("production_year", 1900, 2014), order=0))),
+    _fact("movie_companies", 80_000,
+          fk("company_id", "company_name"), cat("company_type_id", 0, 4)),
+    _fact("cast_info", 300_000,
+          fk("person_id", "name"), cat("role_id", 0, 12)),
+    _fact("movie_info", 150_000, cat("info_type_id", 0, 110)),
+    _fact("movie_info_idx", 40_000, cat("info_type_id", 0, 110)),
+    _fact("movie_keyword", 120_000, fk("keyword_id", "keyword")),
+    _fact("aka_title", 10_000, skew=False),
+    _fact("complete_cast", 20_000, cat("subject_id", 0, 4),
+          cat("status_id", 0, 4), skew=False),
+    _fact("movie_link", 8_000, cat("link_type_id", 0, 18),
+          fk("linked_movie_id", "title", skew=False), skew=False),
+    TableSpec("name", 40_000, (id_col(), cat("gender", 0, 3))),
+    TableSpec("aka_name", 15_000, (fk("person_id", "name"),)),
+    TableSpec("person_info", 60_000, (fk("person_id", "name"),
+                                      cat("info_type_id", 0, 40))),
+    TableSpec("char_name", 20_000, (id_col(),)),
+    TableSpec("company_name", 3_000, (id_col(),
+                                      cat("country_code", 0, 60))),
+    TableSpec("company_type", 4, (id_col(),), fixed=True),
+    TableSpec("info_type", 110, (id_col(),), fixed=True),
+    TableSpec("keyword", 8_000, (id_col(),)),
+    TableSpec("kind_type", 7, (id_col(),), fixed=True),
+    TableSpec("role_type", 12, (id_col(),), fixed=True),
+    TableSpec("comp_cast_type", 4, (id_col(),), fixed=True),
+    TableSpec("link_type", 18, (id_col(),), fixed=True),
+))
+
+# title's kind_id is a cat2 over production_year, but the ORIGINAL builder
+# drew years/kind in title-order too, so the spec draw sequence matches.
+# The one stream quirk the STACK schema carries: question.site_id was
+# drawn before every other column (order=0), and answer.site_id is a hub
+# gather — a fresh Zipf fk into question whose stored values are the
+# question's site (the shared-hub cross-table correlation).
+STACK_SPEC = SchemaSpec("stack", (
+    TableSpec("site", 40, (id_col(),), fixed=True),
+    TableSpec("account", 25_000, (id_col(), cat("website_kind", 0, 5))),
+    TableSpec("so_user", 30_000, (id_col(), fk("site_id", "site", a=1.2),
+                                  fk("account_id", "account", skew=False),
+                                  cat("reputation", 0, 100))),
+    TableSpec("question", 80_000, (id_col(),
+                                   fk("site_id", "site", a=1.2, order=0),
+                                   fk("owner_user_id", "so_user"),
+                                   cat("score", -5, 50))),
+    TableSpec("answer", 400_000, (fk("question_id", "question", a=0.9),
+                                  fk("site_id", "question", via="site_id"),
+                                  fk("owner_user_id", "so_user"))),
+    TableSpec("tag", 2_000, (id_col(), fk("site_id", "site", a=1.2))),
+    TableSpec("tag_question", 500_000, (fk("question_id", "question", a=0.9),
+                                        fk("tag_id", "tag"))),
+    TableSpec("badge", 200_000, (fk("user_id", "so_user", a=0.9),
+                                 fk("site_id", "site", a=1.2),
+                                 cat("badge_kind", 0, 40))),
+    TableSpec("comment", 300_000, (fk("site_id", "site", a=1.2),
+                                   fk("post_id", "question", a=0.9))),
+    TableSpec("post_link", 15_000, (fk("question_id", "question"),
+                                    fk("related_question_id", "question",
+                                       skew=False))),
+))
+
+
 def make_job_like(scale: float = 1.0, seed: int = 0,
                   year_max: Optional[int] = None) -> Database:
-    """21-table IMDb-like star/snowflake schema. `year_max` filters the fact
-    table (and cascades to FK tables) to build IMDb-1950/-1980 snapshots."""
+    """21-table IMDb-like star/snowflake schema: `JOB_SPEC` through the
+    spec interpreter. `year_max` filters the fact-root (and cascades to
+    FK tables via size_with) to build IMDb-1950/-1980 snapshots — the
+    root is drawn first, filtered and reindexed dense, then passed as an
+    override so the remaining draw stream is unchanged."""
     rng = np.random.default_rng(seed)
-    S = lambda n: max(16, int(n * scale))
-
-    n_title = S(60_000)
-    years = rng.integers(1900, 2014, size=n_title).astype(np.int64)
-    # correlated kind: newer movies skew to kinds 0/1
-    kind = np.where(years > 1990, rng.integers(0, 3, n_title),
-                    rng.integers(0, 7, n_title)).astype(np.int64)
-    title = {"id": np.arange(n_title, dtype=np.int64),
-             "kind_id": kind, "production_year": years}
-
+    overrides = {}
     if year_max is not None:
-        keep = years <= year_max
+        tspec = JOB_SPEC.table("title")
+        title = materialize_table(JOB_SPEC, tspec,
+                                  spec_rows(tspec, scale), rng, {})
+        keep = title["production_year"] <= year_max
         title = {k: v[keep] for k, v in title.items()}
-        # reindex ids compactly so FK generation stays dense
-        old_ids = np.flatnonzero(keep)
-        remap = -np.ones(n_title, np.int64)
-        remap[old_ids] = np.arange(len(old_ids))
-        n_title = len(old_ids)
-        title["id"] = np.arange(n_title, dtype=np.int64)
-
-    def fact(n, skew=True, extra=None):
-        n = S(n) if year_max is None else max(16, int(S(n) * n_title / S(60_000)))
-        cols = {"movie_id": (_zipf_fk(rng, n, n_title) if skew
-                             else _uniform_fk(rng, n, n_title))}
-        cols.update(extra(n) if extra else {})
-        return cols
-
-    n_name = S(40_000)
-    n_company = S(3_000)
-    n_keyword = S(8_000)
-
-    tables = {
-        "title": title,
-        "movie_companies": fact(80_000, extra=lambda n: {
-            "company_id": _zipf_fk(rng, n, n_company),
-            "company_type_id": rng.integers(0, 4, n).astype(np.int64)}),
-        "cast_info": fact(300_000, extra=lambda n: {
-            "person_id": _zipf_fk(rng, n, n_name),
-            "role_id": rng.integers(0, 12, n).astype(np.int64)}),
-        "movie_info": fact(150_000, extra=lambda n: {
-            "info_type_id": rng.integers(0, 110, n).astype(np.int64)}),
-        "movie_info_idx": fact(40_000, extra=lambda n: {
-            "info_type_id": rng.integers(0, 110, n).astype(np.int64)}),
-        "movie_keyword": fact(120_000, extra=lambda n: {
-            "keyword_id": _zipf_fk(rng, n, n_keyword)}),
-        "aka_title": fact(10_000, skew=False),
-        "complete_cast": fact(20_000, skew=False, extra=lambda n: {
-            "subject_id": rng.integers(0, 4, n).astype(np.int64),
-            "status_id": rng.integers(0, 4, n).astype(np.int64)}),
-        "movie_link": fact(8_000, skew=False, extra=lambda n: {
-            "link_type_id": rng.integers(0, 18, n).astype(np.int64),
-            "linked_movie_id": _uniform_fk(rng, n, n_title)}),
-        "name": {"id": np.arange(n_name, dtype=np.int64),
-                 "gender": rng.integers(0, 3, n_name).astype(np.int64)},
-        "aka_name": {"person_id": _zipf_fk(rng, S(15_000), n_name)},
-        "person_info": {"person_id": _zipf_fk(rng, S(60_000), n_name),
-                        "info_type_id": rng.integers(0, 40, S(60_000)).astype(np.int64)},
-        "char_name": {"id": np.arange(S(20_000), dtype=np.int64)},
-        "company_name": {"id": np.arange(n_company, dtype=np.int64),
-                         "country_code": rng.integers(0, 60, n_company).astype(np.int64)},
-        "company_type": {"id": np.arange(4, dtype=np.int64)},
-        "info_type": {"id": np.arange(110, dtype=np.int64)},
-        "keyword": {"id": np.arange(n_keyword, dtype=np.int64)},
-        "kind_type": {"id": np.arange(7, dtype=np.int64)},
-        "role_type": {"id": np.arange(12, dtype=np.int64)},
-        "comp_cast_type": {"id": np.arange(4, dtype=np.int64)},
-        "link_type": {"id": np.arange(18, dtype=np.int64)},
-    }
-    db = Database(name=f"job{'' if year_max is None else year_max}",
-                  tables={k: Table(k, v) for k, v in tables.items()})
-    db.stats = analyze(db, rng=np.random.default_rng(seed + 1))
-    return db
+        title["id"] = np.arange(int(keep.sum()), dtype=np.int64)
+        overrides["title"] = title
+    return make_db_from_spec(
+        JOB_SPEC, scale=scale, seed=seed, rng=rng, overrides=overrides,
+        name=f"job{'' if year_max is None else year_max}")
 
 
 def delta_rows(table: Table, n: int,
@@ -135,40 +268,5 @@ def delta_rows(table: Table, n: int,
 
 
 def make_stack_like(scale: float = 1.0, seed: int = 1) -> Database:
-    """10-table StackExchange-like schema."""
-    rng = np.random.default_rng(seed)
-    S = lambda n: max(16, int(n * scale))
-    n_site, n_user, n_q = 40, S(30_000), S(80_000)
-    n_acc = S(25_000)
-    n_tag = S(2_000)
-    q_site = _zipf_fk(rng, n_q, n_site, a=1.2)
-    tables = {
-        "site": {"id": np.arange(n_site, dtype=np.int64)},
-        "account": {"id": np.arange(n_acc, dtype=np.int64),
-                    "website_kind": rng.integers(0, 5, n_acc).astype(np.int64)},
-        "so_user": {"id": np.arange(n_user, dtype=np.int64),
-                    "site_id": _zipf_fk(rng, n_user, n_site, a=1.2),
-                    "account_id": _uniform_fk(rng, n_user, n_acc),
-                    "reputation": rng.integers(0, 100, n_user).astype(np.int64)},
-        "question": {"id": np.arange(n_q, dtype=np.int64),
-                     "site_id": q_site,
-                     "owner_user_id": _zipf_fk(rng, n_q, n_user),
-                     "score": rng.integers(-5, 50, n_q).astype(np.int64)},
-        "answer": {"question_id": _zipf_fk(rng, S(400_000), n_q, a=0.9),
-                   "site_id": q_site[_zipf_fk(rng, S(400_000), n_q)],
-                   "owner_user_id": _zipf_fk(rng, S(400_000), n_user)},
-        "tag": {"id": np.arange(n_tag, dtype=np.int64),
-                "site_id": _zipf_fk(rng, n_tag, n_site, a=1.2)},
-        "tag_question": {"question_id": _zipf_fk(rng, S(500_000), n_q, a=0.9),
-                         "tag_id": _zipf_fk(rng, S(500_000), n_tag)},
-        "badge": {"user_id": _zipf_fk(rng, S(200_000), n_user, a=0.9),
-                  "site_id": _zipf_fk(rng, S(200_000), n_site, a=1.2),
-                  "badge_kind": rng.integers(0, 40, S(200_000)).astype(np.int64)},
-        "comment": {"site_id": _zipf_fk(rng, S(300_000), n_site, a=1.2),
-                    "post_id": _zipf_fk(rng, S(300_000), n_q, a=0.9)},
-        "post_link": {"question_id": _zipf_fk(rng, S(15_000), n_q),
-                      "related_question_id": _uniform_fk(rng, S(15_000), n_q)},
-    }
-    db = Database(name="stack", tables={k: Table(k, v) for k, v in tables.items()})
-    db.stats = analyze(db, rng=np.random.default_rng(seed + 1))
-    return db
+    """10-table StackExchange-like schema: `STACK_SPEC` interpreted."""
+    return make_db_from_spec(STACK_SPEC, scale=scale, seed=seed)

@@ -10,6 +10,11 @@ templates over the 10-table schema joining 4-12 relations.
 Train sets are generated from templates with a seeded RNG; test sets use a
 disjoint seed range (JOB/ExtJOB test = the canonical instantiation per
 template variant, STACK test = extra instantiations), mirroring §VII-A4b.
+The partition is the repo-wide contract in `repro.gen.seeds`: train draws
+from `default_rng(train_seed(base))`, test from
+`default_rng(test_seed(base))` = base + TRAIN_TEST_SEED_GAP, and
+`make_workload` asserts the base seed sits inside one partitionable span
+so no caller's train range can collide with another's test range.
 """
 from __future__ import annotations
 
@@ -18,6 +23,7 @@ from typing import Callable, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.gen.seeds import split_train_test
 from repro.sql.query import Filter, JoinCond, Query, Relation
 
 
@@ -228,7 +234,7 @@ def _stack_templates() -> List[Tuple[str, Callable]]:
     return T
 
 
-def _shuffle_relations(rels, conds, rng) -> Tuple:
+def shuffle_relations(rels, conds, rng) -> Tuple:
     """Randomize the FROM-clause order (real SQL authors don't order joins
     for the executor; Spark's no-CBO path executes the text order, which is
     what makes the paper's Spark-default baseline fail on 9-30% of queries).
@@ -264,27 +270,32 @@ def query_stream(bench: str, seed: int = 0):
     i = 0
     while True:
         tname, fn = templates[i % len(templates)]
-        rels, conds = _shuffle_relations(*fn(rng), rng)
+        rels, conds = shuffle_relations(*fn(rng), rng)
         yield Query(f"{bench}/{tname}#st{i}", rels, conds)
         i += 1
 
 
 def make_workload(bench: str, n_train: int = 200, n_test_per_template: int = 2,
                   seed: int = 7) -> Workload:
+    """Train/test instantiations of `bench`'s templates. `seed` is a BASE
+    seed under the `repro.gen.seeds` partition: train constants come from
+    the train stream, test constants from the disjoint test stream
+    (asserted partitionable — the streams provably never overlap)."""
     templates = _BENCH[bench]()
+    train_s, test_s = split_train_test(seed)
     train: List[Query] = []
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(train_s)
     i = 0
     while len(train) < n_train:
         tname, fn = templates[i % len(templates)]
-        rels, conds = _shuffle_relations(*fn(rng), rng)
+        rels, conds = shuffle_relations(*fn(rng), rng)
         train.append(Query(f"{bench}/{tname}#tr{len(train)}", rels, conds))
         i += 1
     test: List[Query] = []
-    rng_t = np.random.default_rng(seed + 10_000)
+    rng_t = np.random.default_rng(test_s)
     for tname, fn in templates:
         for j in range(n_test_per_template):
-            rels, conds = _shuffle_relations(*fn(rng_t), rng_t)
+            rels, conds = shuffle_relations(*fn(rng_t), rng_t)
             test.append(Query(f"{bench}/{tname}#{j}", rels, conds))
     mt = max(q.n_relations for q in train + test)
     return Workload(bench, mt, train, test)

@@ -39,6 +39,33 @@ def fresh_db(scale: float = 0.06, seed: int = 0):
     return datagen.make_job_like(scale=scale, seed=seed)
 
 
+def generated_world(seed: int, *, scale: float = 0.05, **kw):
+    """A small generated world (`repro.gen.world.sample_world`) sized for
+    tests: fresh database per call, so delta-mutating suites can't
+    cross-contaminate. Same seed => bit-identical world."""
+    from repro.gen.world import sample_world
+    kw.setdefault("n_templates", 6)
+    kw.setdefault("n_train", 12)
+    kw.setdefault("t_min", 3)
+    kw.setdefault("t_max", 5)
+    kw.setdefault("n_queries", 20)
+    return sample_world(seed, scale=scale, **kw)
+
+
+def gen_world_setup(seed: int):
+    """(world, agent, fast queries, delta tables) for fuzzing the
+    scheduler invariants over a generated world: a Noop policy (plans
+    stay syntactic — no jit cost, no random-init interference), the
+    world's smaller train joins, and the schema's delete-safe delta
+    targets."""
+    from repro.gen.spec import delete_safe_tables
+    w = generated_world(seed, with_stream=False)
+    agent = NoopServeAgent(w.meta, max_steps=2)
+    fast = [q for q in w.workload.train if q.n_relations <= 4] \
+        or w.workload.train
+    return w, agent, fast, delete_safe_tables(w.spec)
+
+
 def make_agent(workload, seed: int = 0, **cfg_kw) -> AqoraAgent:
     """The standard serving agent over a workload's encoding meta."""
     return AqoraAgent(WorkloadMeta.from_workload(workload),

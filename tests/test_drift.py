@@ -534,3 +534,70 @@ def test_controller_refit_trigger_and_cooldown(job_workload, agent):
     ctl2, pred2 = run()
     assert [r["trigger"] for r in pred.refit_log] == \
         [r["trigger"] for r in pred2.refit_log]
+
+
+# ------------------------------------------- curriculum demotion actuator
+def test_curriculum_note_drift_floor_and_cooldown():
+    """`note_drift` semantics in isolation: threshold-gated, one demotion
+    per cooldown window, floored at stage 1, window/dwell reset."""
+    from types import SimpleNamespace
+
+    from repro.learn import AdaptiveCurriculum
+
+    cur = AdaptiveCurriculum(start_stage=3, window=4, min_dwell=4,
+                             drift_demote_threshold=0.4, drift_cooldown=3)
+    comp = SimpleNamespace(result=SimpleNamespace(failed=False, latency=1.0))
+    assert not cur.note_drift(0.39) and cur.stage == 3   # below threshold
+    assert cur.note_drift(0.41) and cur.stage == 2
+    assert cur.drift_demotions == [0] and cur.demotions == [0]
+    assert len(cur._window) == 0                         # track record reset
+    assert not cur.note_drift(0.9) and cur.stage == 2    # cooldown holds
+    for _ in range(3):
+        cur.observe(comp)
+    assert cur.note_drift(0.9) and cur.stage == 1        # cooldown elapsed
+    assert not cur.note_drift(0.9) and cur.stage == 1    # floored at 1
+    assert cur.stats()["drift_demotions"] == [0, 3]
+
+
+def test_controller_demotes_curriculum_on_attributed_drift(job_workload,
+                                                           agent):
+    """The fourth actuator: a growth delta raises the detector's peak
+    score past `drift_demote_threshold`, and the shared curriculum drops
+    a stage — PROACTIVELY, while the success-rate window is still clean
+    (every completion here succeeds). Deterministic across runs."""
+    from repro.learn import AdaptiveCurriculum
+
+    class CurriculumWire:           # what BackgroundLearner does in prod
+        def __init__(self, cur):
+            self.cur = cur
+
+        def attach(self, sched):
+            sched.on_complete.append(self.cur.observe)
+
+    def run(with_curriculum):
+        db = fresh_db(scale=0.05)
+        cur = AdaptiveCurriculum(start_stage=3, drift_demote_threshold=0.3) \
+            if with_curriculum else None
+        ctl = DriftController(policy=RefreshPolicy("never"), curriculum=cur)
+        hooks = ([CurriculumWire(cur)] if cur else []) + [ctl]
+        svc = QueryService(db, agent, est=Estimator(db, db.stats),
+                           n_lanes=2, hooks=hooks)
+        comps, _ = svc.run(drifting_delta_stream(
+            [fast_query(i) for i in range(4)], n_queries=12, seed=11,
+            drift_table="movie_info", drift_at=4, growth_rows=6000))
+        return comps, ctl, cur
+
+    comps, ctl, cur = run(True)
+    assert all(not c.result.failed for c in comps)       # success governor
+    assert cur.stage == 2                                #   never fired...
+    assert ctl.stats.curriculum_demotions == 1           #   ...this did
+    assert cur.drift_demotions and cur.demotions == cur.drift_demotions
+    # demotion lands only after the growth delta's completions
+    assert cur.drift_demotions[0] > 4
+    # bit-deterministic: same stream, same demotion point
+    _, ctl2, cur2 = run(True)
+    assert cur2.drift_demotions == cur.drift_demotions
+    assert ctl2.stats.curriculum_demotions == 1
+    # no curriculum => the actuator (and its counter) stays off
+    _, ctl0, _ = run(False)
+    assert ctl0.stats.curriculum_demotions == 0

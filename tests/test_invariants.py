@@ -20,10 +20,12 @@ Two families, both pure functions of their seeds (so failures replay):
     overlap, each query's non-hedge attempt spans count exactly
     `Completion.attempts`, and timestamps are well-ordered everywhere.
 """
+from collections import Counter
+
 import numpy as np
 import pytest
 
-from scenarios import fast_query, fresh_db, make_agent
+from scenarios import fast_query, fresh_db, gen_world_setup, make_agent
 
 from repro.serve.cache import PartitionedStageCache
 from repro.serve.deltas import DeltaBatch
@@ -32,11 +34,16 @@ from repro.sql.cbo import Estimator
 
 
 # ------------------------------------------------------ virtual clock
-def _random_stream(rng, n_queries: int, n_deltas: int):
+def _random_stream(rng, n_queries: int, n_deltas: int, *, queries=None,
+                   delta_tables=("movie_info",)):
     """Strictly increasing, collision-free arrival times (ties between a
-    query and a delta would make 'ahead of the barrier' ambiguous)."""
+    query and a delta would make 'ahead of the barrier' ambiguous).
+    `queries=None` keeps the classic fast_query mix over the JOB world;
+    a query list (e.g. a generated world's train set) is sampled
+    uniformly instead, with deltas cycling `delta_tables`."""
     arrivals = []
     t = 0.0
+    d_i = 0
     kinds = ["q"] * n_queries + ["d"] * n_deltas
     rng.shuffle(kinds)
     if kinds[0] == "d":                        # lead with a query
@@ -44,20 +51,40 @@ def _random_stream(rng, n_queries: int, n_deltas: int):
     for kind in kinds:
         t += 0.05 + float(rng.exponential(0.4))
         if kind == "q":
-            arrivals.append(Arrival(t, query=fast_query(int(rng.integers(6))),
+            q = fast_query(int(rng.integers(6))) if queries is None \
+                else queries[int(rng.integers(len(queries)))]
+            arrivals.append(Arrival(t, query=q,
                                     seed=int(rng.integers(2 ** 31))))
         else:
             arrivals.append(Arrival(t, delta=DeltaBatch(
-                "movie_info", n_append=int(rng.integers(100, 800)),
+                delta_tables[d_i % len(delta_tables)],
+                n_append=int(rng.integers(100, 800)),
                 seed=int(rng.integers(2 ** 31)))))
+            d_i += 1
     return arrivals
 
 
-@pytest.mark.parametrize("seed", [0, 1, 2])
-def test_scheduler_virtual_clock_invariants(job_workload, agent, seed):
+def _world_under_test(request, world: str, seed: int):
+    """(db, agent, stream kwargs) for one fuzz case: the hand-built JOB
+    world with the session agent, or a generator-sampled world with a
+    Noop policy over its own encoding meta."""
+    if world == "job":
+        return (fresh_db(scale=0.05, seed=seed),
+                request.getfixturevalue("agent"),
+                dict(queries=None, delta_tables=("movie_info",)))
+    w, agent, fast, targets = gen_world_setup(seed)
+    return w.db, agent, dict(queries=fast, delta_tables=targets)
+
+
+WORLDS = [("job", 0), ("job", 1), ("job", 2),
+          ("gen", 11), ("gen", 12), ("gen", 13)]
+
+
+@pytest.mark.parametrize("world,seed", WORLDS)
+def test_scheduler_virtual_clock_invariants(request, world, seed):
     rng = np.random.default_rng(100 + seed)
-    db = fresh_db(scale=0.05, seed=seed)
-    stream = _random_stream(rng, n_queries=10, n_deltas=2)
+    db, agent, stream_kw = _world_under_test(request, world, seed)
+    stream = _random_stream(rng, n_queries=10, n_deltas=2, **stream_kw)
     n_lanes = int(rng.integers(1, 5))
     sched = LaneScheduler(db, Estimator(db, db.stats), agent,
                           n_lanes=n_lanes, policy="async",
@@ -94,8 +121,9 @@ def test_scheduler_virtual_clock_invariants(job_workload, agent, seed):
         behind = [c for c in comps if c.seq > d_pos]
         assert all(c.finish_t <= t_apply for c in ahead)
         assert all(c.admit_t >= t_apply for c in behind)
-    # every delta observable: final version == number of deltas applied
-    assert db.table_version("movie_info") == len(deltas)
+    # every delta observable: each table's final version == its delta count
+    for table, n in Counter(a.delta.table for a in deltas).items():
+        assert db.table_version(table) == n
 
 
 @pytest.mark.parametrize("seed", [3, 4])
@@ -123,12 +151,14 @@ def test_scheduler_policies_agree_on_service_times(job_workload, agent,
 
 
 # ------------------------------------------------- chaos (serve.recover)
-@pytest.mark.parametrize("seed", [0, 1, 2])
-def test_virtual_clock_invariants_survive_fault_schedules(job_workload,
-                                                          agent, seed):
+@pytest.mark.parametrize("world,seed", [("job", 0), ("job", 1), ("job", 2),
+                                        ("gen", 21), ("gen", 22)])
+def test_virtual_clock_invariants_survive_fault_schedules(request, world,
+                                                          seed):
     """The PR-5 invariants hold under seeded chaos: whatever mix of
     crashes, transients, stragglers, retries and hedges a fault schedule
-    produces, completions respect causality, lanes stay serialized,
+    produces — over the hand-built JOB world AND generator-sampled
+    worlds — completions respect causality, lanes stay serialized,
     deltas remain STRICT write barriers (retries of pre-delta queries
     drain before the delta applies), every query still emits exactly one
     Completion — and the whole storm replays bit-identically."""
@@ -137,11 +167,15 @@ def test_virtual_clock_invariants_survive_fault_schedules(job_workload,
                                      RecoveryManager, RetryPolicy)
 
     rng = np.random.default_rng(500 + seed)
-    stream = _random_stream(rng, n_queries=12, n_deltas=2)
+    _, agent, stream_kw = _world_under_test(request, world, seed)
+    stream = _random_stream(rng, n_queries=12, n_deltas=2, **stream_kw)
     n_lanes = int(rng.integers(2, 5))
 
     def serve():
-        db = fresh_db(scale=0.05, seed=seed)
+        if world == "job":
+            db = fresh_db(scale=0.05, seed=seed)
+        else:
+            db = gen_world_setup(seed)[0].db       # fresh materialization
         mgr = RecoveryManager(
             injector=FaultInjector(seed=900 + seed, p_crash=0.05,
                                    p_transient=0.25, p_slow=0.2,
@@ -187,7 +221,8 @@ def test_virtual_clock_invariants_survive_fault_schedules(job_workload,
                    for c in comps if c.seq < d_pos)
         assert all(c.admit_t >= t_apply
                    for c in comps if c.seq > d_pos)
-    assert db.table_version("movie_info") == len(deltas)
+    for table, n in Counter(a.delta.table for a in deltas).items():
+        assert db.table_version(table) == n
 
     # the same chaos replays bit-identically
     comps2, _, mgr2, _ = serve()
