@@ -1,0 +1,264 @@
+"""Plan-memory + superoptimization benchmark: repeated-template serving
+under drift — feeds results/BENCH_planmem.json.
+
+Production streams repeat templates; LQRS re-decides every arrival from
+scratch. This benchmark prices the PR-10 alternative — memoize the best
+known action sequence per (template x table-version band), replay it
+ahead of the agent, and spend idle completion cadence on a background
+beam-search superoptimizer — against the strongest memory-less arm the
+repo has (the PR-3 lifelong-learning loop).
+
+Workload: the PR-3 drifting trap stream over a JOB-like database.
+Trap templates are written fact-fact first; their syntactic order is
+mediocre pre-drift (CBO reordering is strictly better under the stale
+stats) and catastrophic post-drift (a cast_info growth delta pushes the
+fact-fact join past the materialize cap: 300s timeout). Safe orders
+stay seconds at all times, so plan quality — not caching — dominates
+the percentiles, and the mid-stream delta exercises the memory's
+fencing + re-promotion path. Four arms on fresh identical databases:
+
+  frozen   cold policy, argmax, no memory (served twice: determinism).
+  memoff   frozen + ATTACHED but empty PlanMemory, serving ingest off —
+           must be completion-bit-identical to `frozen` (the memory's
+           off-switch pin, same discipline as obs/qos).
+  online   the full PR-3 loop (harvest, prioritized replay, background
+           PPO, gated hot-swap, curriculum) with exploring lanes.
+  memo     plan memory (serving ingest on) + background superoptimizer:
+           hits replay with ZERO act_batch participation; the
+           superoptimizer beam-searches hot templates and promotes only
+           candidates that beat the re-simulated incumbent — finding
+           the safe trap orders by deterministic search instead of
+           stochastic exploration + gradient steps.
+
+Reported per arm: p50/p99 virtual latency (whole stream + post-drift),
+failures, host seconds, act calls per query (sum of decide-batch sizes
+/ queries — the host-side policy load a memo hit removes). Gates (full
+run): frozen bit-deterministic, memoff bit-identical to frozen, memo
+beats online on p50 AND on act calls per query. Smoke gates determinism
++ bit-identity + the act-call win.
+
+  PYTHONPATH=src python -m benchmarks.bench_planmem [--smoke]
+"""
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.bench_online import _trap_query
+from benchmarks.common import (bench_args, bench_logger, csv_line,
+                               emit_bench_json)
+
+log = bench_logger("planmem")
+
+
+def _stream(wl, db, *, n_queries: int, rate: float, seed: int,
+            drift_at: int, growth: int, churn_every: int):
+    """Open-loop trap-heavy repeated-template arrivals: two of every
+    three queries cycle six trap templates, the rest cycle fast
+    dimension joins; one cast_info growth delta after `drift_at`
+    queries (fences every trap entry), then movie_keyword churn
+    (version bumps outside the trap band)."""
+    from repro.serve.deltas import DeltaBatch
+    from repro.serve.scheduler import Arrival
+
+    rng = np.random.default_rng(seed)
+    fast = [q for q in wl.train if q.n_relations <= 10][:8] or wl.train[:8]
+    traps = [_trap_query(i, 1935 + 3 * i) for i in range(6)]
+    ci_rows = db.table("cast_info").nrows
+    mk_rows = db.table("movie_keyword").nrows
+    t, out, since_churn = 0.0, [], 0
+    for i in range(n_queries):
+        t += float(rng.exponential(1.0 / rate))
+        q = fast[i % len(fast)] if i % 3 == 2 else traps[i % len(traps)]
+        out.append(Arrival(t, query=q, seed=int(rng.integers(2 ** 31))))
+        if i + 1 == drift_at:
+            out.append(Arrival(t, delta=DeltaBatch(
+                "cast_info", n_append=growth * ci_rows, seed=999)))
+        elif i + 1 > drift_at:
+            since_churn += 1
+            if since_churn >= churn_every:
+                since_churn = 0
+                out.append(Arrival(t, delta=DeltaBatch(
+                    "movie_keyword", n_append=mk_rows // 50,
+                    delete_frac=0.02, seed=1000 + i)))
+    return out
+
+
+def _fresh_env(scale: float):
+    from repro.sql import datagen
+    from repro.sql.cbo import Estimator
+    db = datagen.make_job_like(scale=scale, seed=0)
+    return db, Estimator(db, db.stats)
+
+
+def _serve(db, est, agent, stream, *, lanes, explore=False, hooks=(),
+           plan_memory=None):
+    from repro.serve.service import QueryService
+    svc = QueryService(db, agent, est=est, n_lanes=lanes, policy="async",
+                       explore=explore, hooks=list(hooks),
+                       plan_memory=plan_memory)
+    t0 = time.perf_counter()
+    comps, stats = svc.run(stream)
+    host = time.perf_counter() - t0
+    act_per_q = sum(svc.scheduler.decide_sizes) / max(len(comps), 1)
+    return comps, stats, host, act_per_q
+
+
+def _sig(comps):
+    return [(c.seq, c.admit_t, c.finish_t, tuple(c.traj.actions))
+            for c in comps]
+
+
+def _pcts(comps):
+    lat = np.asarray([c.latency for c in comps])
+    return (float(np.percentile(lat, 50)), float(np.percentile(lat, 99)))
+
+
+def _row(comps, stream, host, act_per_q):
+    p50, p99 = _pcts(comps)
+    drift_t = next(a.t for a in stream if a.delta is not None)
+    dp50, dp99 = _pcts([c for c in comps if c.arrival_t > drift_t])
+    return {"p50": round(p50, 3), "p99": round(p99, 3),
+            "post_drift_p50": round(dp50, 3),
+            "post_drift_p99": round(dp99, 3),
+            "failed": int(sum(c.result.failed for c in comps)),
+            "host_seconds": round(host, 2),
+            "act_calls_per_query": round(act_per_q, 3)}
+
+
+def main(argv=None):
+    args = bench_args(argv, lanes=6)
+
+    from repro.checkpoint import agent_state, copy_tree, install_agent_state
+    from repro.core.agent import AgentConfig, AqoraAgent
+    from repro.core.encoding import WorkloadMeta
+    from repro.learn import (AdaptiveCurriculum, PolicyStore, ReplayBuffer,
+                             make_online_loop)
+    from repro.serve.plans import PlanMemory, Superoptimizer
+    from repro.sql import workloads
+
+    scale = 0.05 if args.smoke else 0.2
+    n_queries = 24 if args.smoke else 96
+    drift_at = 8 if args.smoke else 24
+    rate, growth, churn_every = 2.0, 8, 16
+
+    wl = workloads.make_workload("job", n_train=48, n_test_per_template=1,
+                                 seed=7)
+    meta = WorkloadMeta.from_workload(wl)
+    serving_agent = AqoraAgent(meta, AgentConfig(), seed=0)
+    learner_agent = AqoraAgent(meta, AgentConfig(), seed=1)
+    init_s = copy_tree(agent_state(serving_agent))
+    init_l = copy_tree(agent_state(learner_agent))
+    probe = [_trap_query(100, 1938), _trap_query(101, 1944), wl.test[0]]
+
+    db0, _ = _fresh_env(scale)
+    stream = _stream(wl, db0, n_queries=n_queries, rate=rate, seed=17,
+                     drift_at=drift_at, growth=growth,
+                     churn_every=churn_every)
+    n_traps = sum(a.query is not None and a.query.name.startswith("trap")
+                  for a in stream)
+    n_deltas = sum(a.delta is not None for a in stream)
+    log.info(f"== plan memory + superopt under drift: {n_queries} queries "
+             f"({n_traps} trap), {n_deltas} deltas, {args.lanes} lanes, "
+             f"open-loop {rate} qps ==")
+
+    tmp_root = tempfile.TemporaryDirectory(prefix="bench_planmem_ps_")
+    rows = {}
+
+    def reset_agents():
+        install_agent_state(serving_agent, init_s, copy=True)
+        install_agent_state(learner_agent, init_l, copy=True)
+
+    # -- frozen (twice: determinism pin) ------------------------------
+    def frozen_pass():
+        reset_agents()
+        db, est = _fresh_env(scale)
+        return _serve(db, est, serving_agent, stream, lanes=args.lanes)
+
+    fr_comps, _, fr_host, fr_act = frozen_pass()
+    fr2_comps, _, _, _ = frozen_pass()
+    deterministic = _sig(fr_comps) == _sig(fr2_comps)
+    rows["frozen"] = _row(fr_comps, stream, fr_host, fr_act)
+
+    # -- memoff: attached-but-empty memory must not perturb anything --
+    reset_agents()
+    db, est = _fresh_env(scale)
+    mem_off = PlanMemory(ingest_serving=False)
+    mo_comps, _, mo_host, mo_act = _serve(db, est, serving_agent, stream,
+                                          lanes=args.lanes,
+                                          plan_memory=mem_off)
+    memoff_identical = _sig(mo_comps) == _sig(fr_comps)
+    rows["memoff"] = _row(mo_comps, stream, mo_host, mo_act)
+
+    # -- online: the full PR-3 lifelong loop, no memory ---------------
+    reset_agents()
+    db, est = _fresh_env(scale)
+    store = PolicyStore(f"{tmp_root.name}/store", probe, mode="gate")
+    on_hooks = make_online_loop(
+        serving_agent, store=store,
+        curriculum=AdaptiveCurriculum(window=8, min_dwell=8),
+        replay=ReplayBuffer(capacity=256, regret_scale=2.0,
+                            regret_cap=8.0, fail_boost=1.5),
+        update_every=3, sample_size=8, gate_every=2, seed=3,
+        learner_agent=learner_agent)
+    on_comps, _, on_host, on_act = _serve(db, est, serving_agent, stream,
+                                          lanes=args.lanes, explore=True,
+                                          hooks=on_hooks)
+    rows["online"] = _row(on_comps, stream, on_host, on_act)
+
+    # -- memo: plan memory + background superoptimizer ----------------
+    reset_agents()
+    db, est = _fresh_env(scale)
+    memory = PlanMemory()
+    superopt = Superoptimizer(memory, opt_every=4, sim_budget=24)
+    me_comps, me_stats, me_host, me_act = _serve(
+        db, est, serving_agent, stream, lanes=args.lanes,
+        hooks=[superopt], plan_memory=memory)
+    rows["memo"] = _row(me_comps, stream, me_host, me_act)
+    rows["memo"]["memory"] = memory.stats()
+    so = superopt.summary()
+    rows["memo"]["superopt"] = {k: so[k] for k in
+                               ("rounds", "sims", "promotions",
+                                "skipped_no_gain", "host_seconds")}
+
+    for name in ("frozen", "memoff", "online", "memo"):
+        r = rows[name]
+        log.info(f"{name:7s} p50={r['p50']:7.2f}s p99={r['p99']:7.2f}s | "
+                 f"post-drift p50={r['post_drift_p50']:7.2f}s "
+                 f"p99={r['post_drift_p99']:7.2f}s | fails={r['failed']:3d} "
+                 f"act/q={r['act_calls_per_query']:5.2f} "
+                 f"host={r['host_seconds']:6.1f}s")
+    log.info(f"frozen deterministic: {deterministic};  memoff "
+             f"bit-identical: {memoff_identical};  memoized "
+             f"{me_stats.n_memoized}/{len(me_comps)} completions, "
+             f"{rows['memo']['superopt']['promotions']} superopt "
+             f"promotions, {memory.stats()['fenced']} fences")
+
+    ok_p50 = rows["memo"]["p50"] <= rows["online"]["p50"]
+    ok_act = rows["memo"]["act_calls_per_query"] \
+        < rows["online"]["act_calls_per_query"]
+    ok = bool(deterministic and memoff_identical and ok_act
+              and (args.smoke or ok_p50))
+
+    csv_line("planmem_memo_p50", 0, rows["memo"]["p50"])
+    csv_line("planmem_online_p50", 0, rows["online"]["p50"])
+    csv_line("planmem_act_per_query", 0,
+             rows["memo"]["act_calls_per_query"])
+    emit_bench_json({
+        "smoke": args.smoke,
+        "world": {"scale": scale, "n_queries": n_queries,
+                  "n_traps": n_traps, "n_deltas": n_deltas,
+                  "drift_at": drift_at},
+        **rows,
+        "frozen_deterministic": deterministic,
+        "memoff_bit_identical": memoff_identical,
+        "memo_beats_online_p50": ok_p50,
+        "memo_beats_online_act": ok_act,
+        "gates_ok": ok,
+    }, name="BENCH_planmem.json")
+    tmp_root.cleanup()
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if main() else 1)

@@ -21,10 +21,12 @@ def main() -> None:
                             bench_cbo_cost, bench_delta_table, bench_drift,
                             bench_dynamic, bench_faults, bench_generalize,
                             bench_kernels, bench_monitor, bench_obs,
-                            bench_online, bench_qos, bench_query_perf,
-                            bench_roofline, bench_serve, bench_tails)
+                            bench_online, bench_planmem, bench_qos,
+                            bench_query_perf, bench_roofline, bench_serve,
+                            bench_tails)
     ran, missing = [], []
-    for mod in (bench_query_perf, bench_serve, bench_online, bench_qos,
+    for mod in (bench_query_perf, bench_serve, bench_online, bench_planmem,
+                bench_qos,
                 bench_drift, bench_faults, bench_delta_table, bench_tails,
                 bench_dynamic, bench_generalize, bench_ablation_rl,
                 bench_ablation_net, bench_ablation_strategy,

@@ -123,7 +123,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose=True,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = hloanalysis.cost_analysis_dict(compiled)
     hlo = hloanalysis.analyze(compiled.as_text())
     coll = dict(hlo.collectives)
     coll["total"] = hlo.coll_total

@@ -21,6 +21,18 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalize `compiled.cost_analysis()` across jax versions: older
+    releases returned a one-element list of per-program dicts, newer ones
+    return the dict directly (and may return None for trivial programs).
+    Every caller goes through this seam instead of calling `.get` on
+    whatever shape the installed jax produces."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}
+
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
     "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,

@@ -6,6 +6,16 @@ from __future__ import annotations
 import jax
 
 
+def _axis_types_kw(n: int) -> dict:
+    """`jax.sharding.AxisType` was removed from newer jax releases; when
+    absent, `jax.make_mesh` defaults every axis to Auto anyway, so the
+    explicit kwarg is only passed where the enum still exists."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
 
@@ -14,12 +24,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     pods can join/leave elastically (see runtime/elastic.py)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types_kw(len(axes)))
 
 
 def make_host_mesh():
     """Whatever devices exist (CPU smoke tests: 1 device)."""
     n = len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((1, n), ("data", "model"), **_axis_types_kw(2))

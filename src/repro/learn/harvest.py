@@ -12,6 +12,16 @@ calls and no virtual-clock cost.
 Trajectories with zero decision points (queries that ran to completion
 before the first stage boundary) carry no gradient and are counted but
 not buffered.
+
+Plan-memory interplay: MEMOIZED completions (`comp.memoized`) replayed a
+scripted action sequence — no policy evaluation happened, their logps
+are 0.0 placeholders, and feeding them to PPO would poison the
+importance ratios — so they are counted (`n_memoized`) and skipped. For
+NON-memoized completions, when a `plan_memory` is wired in, the observed
+latency is folded back into the matching entry's streaming stats
+(`PlanMemory.note_latency`): the memory's mean/variance per template
+keeps tracking live serving conditions even while the entry itself is
+not being replayed.
 """
 from __future__ import annotations
 
@@ -21,12 +31,16 @@ from repro.learn.replay import Experience, ReplayBuffer
 
 
 class TrajectoryHarvester:
-    def __init__(self, replay: Optional[ReplayBuffer] = None):
+    def __init__(self, replay: Optional[ReplayBuffer] = None,
+                 plan_memory=None):
         self.replay = replay if replay is not None else ReplayBuffer()
+        self.plan_memory = plan_memory
         self.n_seen = 0
         self.n_harvested = 0
         self.n_empty = 0
         self.n_retried = 0
+        self.n_memoized = 0
+        self.n_fed_back = 0            # latencies folded into memory stats
         self._sched = None
 
     def attach(self, scheduler) -> None:
@@ -36,6 +50,15 @@ class TrajectoryHarvester:
     # ------------------------------------------------------------ harvest
     def _on_complete(self, comp) -> None:
         self.n_seen += 1
+        if getattr(comp, "memoized", False):
+            # scripted replay: logps are placeholders, not policy samples
+            self.n_memoized += 1
+            return
+        if self.plan_memory is not None and not comp.result.failed:
+            if self.plan_memory.note_latency(
+                    comp.query, self._sched.db.versions,
+                    comp.result.latency):
+                self.n_fed_back += 1
         if not comp.traj.actions:
             self.n_empty += 1
             return
@@ -59,4 +82,5 @@ class TrajectoryHarvester:
     def stats(self) -> Dict[str, float]:
         return {"seen": self.n_seen, "harvested": self.n_harvested,
                 "empty": self.n_empty, "retried": self.n_retried,
+                "memoized": self.n_memoized, "fed_back": self.n_fed_back,
                 **self.replay.stats()}

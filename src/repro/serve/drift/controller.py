@@ -75,7 +75,7 @@ class DriftController:
                  policy: Optional[RefreshPolicy] = None,
                  replay=None, predictor=None, store=None,
                  probes: Optional[CoverageProbeSet] = None,
-                 curriculum=None,
+                 curriculum=None, plan_memory=None,
                  refit_threshold: float = 1.0, refit_every: int = 8,
                  refit_samples: int = 64, refit_epochs: int = 2,
                  probe_threshold: float = 1.0,
@@ -91,7 +91,12 @@ class DriftController:
         (share the instance with the `BackgroundLearner`, which copies
         `stage` onto the scheduler between ticks). All are optional: the
         detector scores from catalog lag alone when evidence sources are
-        absent, and actuators without their dependency simply stay off."""
+        absent, and actuators without their dependency simply stay off.
+        `plan_memory` (a `serve.plans.PlanMemory`) gets `note_stats_refresh`
+        whenever a re-ANALYZE rewrites a table's statistics: the memory's
+        entries on that table are fenced — demoted from blind replay to
+        superoptimizer hint prior — because the plan that won under the
+        old stats is no longer evidence under the new ones."""
         self.detector = detector if detector is not None else DriftDetector()
         self.policy = policy if policy is not None else RefreshPolicy("never")
         self.replay = replay
@@ -99,6 +104,7 @@ class DriftController:
         self.store = store
         self.probes = probes
         self.curriculum = curriculum
+        self.plan_memory = plan_memory
         assert probes is None or store is not None, \
             "probe coverage needs a PolicyStore to install the set on"
         self.refit_threshold = refit_threshold
@@ -245,6 +251,10 @@ class DriftController:
                 # fresh stats change probe planning without a version bump:
                 # the store's version-keyed incumbent cache must not survive
                 self.store.note_stats_refresh()
+            if self.plan_memory is not None:
+                # same staleness, different store: memoized plans that won
+                # under the old stats are fenced to hint-prior status
+                self.plan_memory.note_stats_refresh(tables, t_apply)
             return modeled_total if self.charge_virtual else 0.0
         return task
 

@@ -36,7 +36,7 @@ from repro.serve.obs.explain import PHASES
 __all__ = ["Hypothesis", "attribute", "CAUSES"]
 
 CAUSES = ("policy_swap", "stats_drift", "fault_burst", "hot_tenant",
-          "maintenance", "unknown")
+          "maintenance", "stale_memo", "unknown")
 
 _SWAP_KINDS = frozenset({"policy_swap", "policy_commit"})
 _INJECTED_KINDS = frozenset({"crash", "transient", "slow"})
@@ -230,6 +230,24 @@ def attribute(*, tenant: str, metric_label: str,
             f"t={charged[-1].t:.0f}s)",
             {"n_tasks": len(charged),
              "queue_share_delta": round(queue_share, 4)}))
+
+    # ---- stale memo: gated on plan-memory fence events in the window —
+    # memoized replays whose band went stale (delta / re-ANALYZE / replay
+    # failure) served degraded plans until the fence landed. Execute-
+    # dominant shape (the replayed plan, not queueing, burned the time).
+    fences = by_kind.get("plan_memory_fenced", [])
+    if fences:
+        reasons = sorted({e.attrs.get("reason", "") for e in fences})
+        out.append(Hypothesis(
+            "stale_memo",
+            1.0 + 2.0 * exec_share + 1.0 * min(len(fences) / n_win, 1.0),
+            f"{who} {metric_label} regression caused by stale memoized "
+            f"plans (plan memory fenced {len(fences)} entr"
+            f"{'y' if len(fences) == 1 else 'ies'}: "
+            f"{','.join(r for r in reasons if r)})",
+            {"n_fenced": len(fences), "reasons": reasons,
+             "t_last_fence": round(fences[-1].t, 6),
+             "execute_share_delta": round(exec_share, 4)}))
 
     out.append(Hypothesis(
         "unknown", 0.3,

@@ -33,7 +33,7 @@ import dataclasses
 import math
 from typing import List, Optional
 
-from repro.serve.qos.degrade import DegradationLadder
+from repro.serve.qos.degrade import DegradationLadder, _as_budget
 from repro.serve.qos.predictor import LatencyPredictor
 from repro.serve.qos.tenancy import TenantRegistry
 
@@ -102,17 +102,25 @@ class QoSAdmission(AdmissionPolicy):
     def __init__(self, registry: Optional[TenantRegistry] = None, *,
                  predictor: Optional[LatencyPredictor] = None,
                  ladder: Optional[DegradationLadder] = None,
-                 reject_hopeless: bool = True):
+                 reject_hopeless: bool = True, plan_memory=None):
+        """`plan_memory` (a `serve.plans.PlanMemory`) enables the ladder's
+        memo rungs: at admission the policy peeks (`would_hit`, count-
+        free) whether the query's template is memoized on the current
+        version band and passes that bit to `ladder.choose` — so a
+        severity band that would otherwise reject can admit on the
+        replay-the-memoized-plan rung instead."""
         self.registry = registry if registry is not None else TenantRegistry()
         self.predictor = predictor
         # a predictor without a ladder would reject everything it flags or
         # nothing at all — default to the standard 3-rung ladder
         self.ladder = ladder if ladder is not None else DegradationLadder()
         self.reject_hopeless = reject_hopeless
+        self.plan_memory = plan_memory
         self.n_admitted = 0
         self.n_degraded = 0
         self.n_rejected = 0
         self.n_deferred = 0            # defer events (retries count once each)
+        self.n_memo_admits = 0         # admits earned by a memo rung
 
     # ------------------------------------------------------------ plumbing
     def attach(self, scheduler) -> None:
@@ -160,7 +168,13 @@ class QoSAdmission(AdmissionPolicy):
         if self.predictor is not None and a.deadline is not None:
             predicted = self.predictor.predict_query(a.query)
             slack = a.deadline - start_t
-            d = self.ladder.choose(predicted, slack)
+            memo_hit = False
+            if self.plan_memory is not None:
+                memo_hit = self.plan_memory.would_hit(
+                    a.query, self._sched.db.versions)
+            d = self.ladder.choose(predicted, slack, memo_hit=memo_hit)
+            if d.memo_only:
+                self.n_memo_admits += 1
             if d.action == "reject" and self.reject_hopeless:
                 self.n_rejected += 1
                 return AdmissionDecision(
@@ -168,7 +182,7 @@ class QoSAdmission(AdmissionPolicy):
                     reason=f"predicted {predicted:.1f}s vs "
                            f"{slack:.1f}s slack")
             budget = d.hook_budget if d.action == "admit" \
-                else self.ladder.rungs[-1].hook_budget
+                else _as_budget(self.ladder.rungs[-1].hook_budget)
             self.registry.acquire(a.tenant, start_t)
             self.n_admitted += 1
             self.n_degraded += d.degraded or d.action == "reject"
@@ -183,6 +197,7 @@ class QoSAdmission(AdmissionPolicy):
     def stats(self):
         return {"admitted": self.n_admitted, "degraded": self.n_degraded,
                 "rejected": self.n_rejected, "deferred": self.n_deferred,
+                "memo_admits": self.n_memo_admits,
                 "tenants": self.registry.stats(),
                 "predictor": None if self.predictor is None
                 else getattr(self.predictor, "stats", dict)()}

@@ -99,6 +99,8 @@ class Completion:
     #                                    the kind of the FIRST failed attempt
     first_admit_t: float = 0.0         # attempt 1's admission (== admit_t
     #                                    for single-attempt queries)
+    memoized: bool = False             # served by a plan-memory replay
+    #                                    (zero act_batch participation)
 
     @property
     def latency(self) -> float:
@@ -148,6 +150,7 @@ class _Lane:
     hook_budget: Optional[int] = None  # admission-assigned (None = full)
     degraded: bool = False
     predicted: Optional[float] = None
+    memoized: bool = False             # running a plan-memory replay
     held: Optional[float] = None       # hedge-race stash: the run finished
     #   at this virtual time but its completion is deferred until the pair
     #   resolves — the lane stays occupied (blocks refill + write barriers)
@@ -184,7 +187,8 @@ class LaneScheduler:
                  stage: int = 3, explore: bool = False,
                  cluster: Optional[ClusterModel] = None,
                  policy: str = "async", window: Optional[float] = None,
-                 reuse_stages: bool = True, admission=None, recovery=None):
+                 reuse_stages: bool = True, admission=None, recovery=None,
+                 plan_memory=None):
         assert policy in ("async", "edf", "lockstep"), policy
         assert admission is None or policy != "lockstep", \
             "admission control needs per-lane refill (async/edf)"
@@ -242,9 +246,16 @@ class LaneScheduler:
         # emit point below is guarded by `self.obs is not None`, so
         # obs=None keeps the run bit-identical to an untraced scheduler
         self.obs = None
+        # plan memory (serve.plans.PlanMemory.attach sets this): probed at
+        # `_start` ahead of the agent — a hit replays the stored action
+        # sequence with ZERO act_batch participation. None (or an empty
+        # memory with ingest off) keeps completions bit-identical.
+        self.plan_memory = None
         self._pending: deque = deque()
         if recovery is not None:
             recovery.attach(self)
+        if plan_memory is not None:
+            plan_memory.attach(self)
 
     # ------------------------------------------------------------- driving
     def run(self, stream: Sequence[Arrival]) -> List[Completion]:
@@ -415,8 +426,24 @@ class LaneScheduler:
             # budget (0 by default — retries run the resumed/replanned
             # remainder without competing for policy bandwidth)
             hook_budget = ticket.hook_budget
-        steps = self.agent.cfg.max_steps if hook_budget is None \
-            else min(hook_budget, self.agent.cfg.max_steps)
+        # plan-memory fast path: probe AHEAD of the agent — on a hit the
+        # run gets exactly len(actions) suspensions and `_replay` scripts
+        # them, so this query never enters an act_batch. Retries keep
+        # their ticket semantics (a memoized plan already failed once on
+        # this band would be fenced by the completion hook anyway).
+        memo = None
+        if arrival.ticket is None and self.plan_memory is not None:
+            memo = self.plan_memory.probe(q, self.db.versions)
+            if self.obs is not None:
+                self.obs.event(
+                    "plan_memory_hit" if memo is not None
+                    else "plan_memory_miss",
+                    {"lane": lane.idx, "query": q.name}, t=admit_t)
+        if memo is not None:
+            steps = len(memo.actions)
+        else:
+            steps = self.agent.cfg.max_steps if hook_budget is None \
+                else min(hook_budget, self.agent.cfg.max_steps)
         cache = None
         shared = getattr(self.db, "_stage_cache", None)
         if self.reuse_stages and isinstance(shared, PartitionedStageCache):
@@ -445,9 +472,41 @@ class LaneScheduler:
         lane.arrival, lane.admit_t = arrival, admit_t
         lane.hook_budget, lane.degraded = hook_budget, degraded
         lane.predicted = predicted
+        lane.memoized = memo is not None
         lane.state = run.start()
+        if memo is not None and lane.state is not None:
+            self._replay(lane, memo)
         if lane.state is None:        # ran to completion with no boundary
             self._finish(lane)
+
+    def _replay(self, lane: _Lane, entry) -> None:
+        """Script a memoized entry's stored actions through the lane's run
+        — the plan-memory fast path. Decisions are free on the virtual
+        clock like agent decisions; the (tiny) apply cost is charged to
+        hook_seconds. No states/masks are recorded (there was no policy
+        evaluation — the harvester skips memoized completions), and a
+        stored action that is illegal on the current state degrades to a
+        noop inside `apply_action` (returns no plan change), so replays
+        are robust to in-band drift."""
+        space = self.agent.space
+        for a in entry.actions:
+            if lane.state is None:
+                break
+            t0 = time.perf_counter()
+            a = int(a)
+            new_plan, r, extra = apply_action(space, lane.state, a)
+            lane.traj.actions.append(a)
+            lane.traj.logps.append(0.0)    # scripted, not sampled
+            lane.traj.rewards.append(r)
+            lane.traj.decoded.append(space.decode(a))
+            lane.extra_plan += extra
+            if self.obs is not None:
+                self.obs.on_decide(lane, lane.next_event,
+                                   lane.traj.decoded[-1], r)
+            lane.traj.hook_seconds += time.perf_counter() - t0
+            lane.state = lane.run.resume(new_plan)
+        while lane.state is not None:      # entry shorter than boundaries
+            lane.state = lane.run.resume(None)
 
     # ------------------------------------------------------------ deciding
     def _decide(self, decide: List[_Lane]) -> None:
@@ -534,7 +593,7 @@ class LaneScheduler:
             return                    # requeued as a retry, or hedge-stashed
         comp = self._build_comp(arr, traj, res, lane.admit_t, finish_t,
                                 lane.idx, lane.hook_budget, lane.degraded,
-                                lane.predicted)
+                                lane.predicted, memoized=lane.memoized)
         self.completions.append(comp)
         self._release(lane, finish_t)
         for cb in self.on_complete:
@@ -544,7 +603,8 @@ class LaneScheduler:
                     admit_t: float, finish_t: float, lane_idx: int,
                     hook_budget: Optional[int], degraded: bool,
                     predicted: Optional[float], hedged: bool = False,
-                    first_admit: Optional[float] = None) -> Completion:
+                    first_admit: Optional[float] = None,
+                    memoized: bool = False) -> Completion:
         ticket = arr.ticket
         attempts = 1 if ticket is None else ticket.attempt
         recovered = attempts > 1 and not res.failed
@@ -561,7 +621,7 @@ class LaneScheduler:
             deadline=arr.deadline, hook_budget=hook_budget,
             degraded=degraded, predicted=predicted, attempts=attempts,
             recovered=recovered, hedged=hedged, failure_kind=kind,
-            first_admit_t=first_admit)
+            first_admit_t=first_admit, memoized=memoized)
 
     def _emit(self, comp: Completion) -> None:
         """Record a recovery-plane completion (the manager has already
@@ -578,4 +638,5 @@ class LaneScheduler:
         lane.free_at = free_at
         lane.run = lane.state = lane.arrival = None
         lane.hook_budget, lane.degraded, lane.predicted = None, False, None
+        lane.memoized = False
         lane.held = None

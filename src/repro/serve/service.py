@@ -94,6 +94,9 @@ class ServiceStats:
     # ---- SLO watchdog totals (serve.obs.monitor) ------------------------
     n_anomalies: int = 0             # detector alerts, all series
     n_incidents: int = 0             # incidents opened
+    # ---- plan memory (serve.plans; None unless one is attached) ---------
+    n_memoized: int = 0              # completions served by memo replay
+    plan_memory: Optional[Dict] = None   # PlanMemory.stats() counters
 
     def as_dict(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -124,7 +127,7 @@ class QueryService:
                  cache_bytes: int = 256 * 1024 * 1024,
                  reuse_stages: bool = True, explore: bool = False,
                  hooks: Sequence = (), tenants=None, admission=None,
-                 recovery=None, obs=None, monitor=None):
+                 recovery=None, obs=None, monitor=None, plan_memory=None):
         """`hooks` are objects with an `attach(scheduler)` method (e.g. the
         lifelong-learning loop's `learn.TrajectoryHarvester` /
         `learn.BackgroundLearner`); each is attached to every scheduler
@@ -144,8 +147,11 @@ class QueryService:
         it. `monitor` (a `serve.obs.SloMonitor`) attaches the online SLO
         watchdog AFTER the hooks — it reads each completion's assembled
         span tree, so the tracer (auto-created when `obs` is None) must
-        observe first. All None = the PR-2 path, bit-identical; a monitor
-        with alerts unwired keeps completions bit-identical too."""
+        observe first. `plan_memory` (a `serve.plans.PlanMemory`) attaches
+        the memoized-replay fast path right after the tracer (its events
+        need `scheduler.obs` live) and before the hooks (so harvesters see
+        `comp.memoized`). All None = the PR-2 path, bit-identical; a
+        monitor with alerts unwired keeps completions bit-identical too."""
         self.db = db
         self.agent = agent
         self.est = est if est is not None else Estimator(db, db.stats)
@@ -162,6 +168,7 @@ class QueryService:
             obs = Tracer()
         self.obs = obs
         self.monitor = monitor
+        self.plan_memory = plan_memory
         if reuse_stages:
             if tenants is not None:
                 # every REGISTERED tenant gets its own partition (explicit
@@ -189,6 +196,8 @@ class QueryService:
             admission=self.admission, recovery=self.recovery)
         if self.obs is not None:
             self.obs.attach(self.scheduler)
+        if self.plan_memory is not None:
+            self.plan_memory.attach(self.scheduler)
         for h in self.hooks:
             h.attach(self.scheduler)
         if self.monitor is not None:
@@ -224,6 +233,10 @@ class QueryService:
             # detector baselines, anomaly/incident history and the
             # plan-provenance ledger accumulate the same way
             self.monitor.reset()
+        if self.plan_memory is not None:
+            # probe/hit/promotion counters accumulate across runs; the
+            # ENTRIES only drop with clear_entries (they are the product)
+            self.plan_memory.reset_stats(clear_entries=clear_entries)
 
     def run_queries(self, queries: Sequence, *, seeds=None) \
             -> Tuple[List[Completion], ServiceStats]:
@@ -286,7 +299,9 @@ class QueryService:
                 0, 0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, self._cache_dict(),
                 sched.ticks, 0.0, 0.0, n_rejected=len(rejects),
                 per_tenant=self._tenant_stats([], rejects, 0.0)
-                if self.tenants is not None else None)
+                if self.tenants is not None else None,
+                plan_memory=self.plan_memory.stats()
+                if self.plan_memory is not None else None)
         lat = np.asarray([c.latency for c in comps])
         wait = np.asarray([c.queue_wait for c in comps])
         first = min(c.arrival_t for c in comps)
@@ -320,4 +335,7 @@ class QueryService:
             n_retried=sum(c.attempts > 1 for c in comps),
             n_recovered=sum(c.recovered for c in comps),
             n_hedged=sum(c.hedged for c in comps),
-            n_anomalies=n_anom, n_incidents=n_inc)
+            n_anomalies=n_anom, n_incidents=n_inc,
+            n_memoized=sum(c.memoized for c in comps),
+            plan_memory=self.plan_memory.stats()
+            if self.plan_memory is not None else None)

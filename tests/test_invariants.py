@@ -413,3 +413,67 @@ def test_partitioned_cache_byte_budget_accounting(seed):
         assert d["hits"] == d["misses"] == d["evictions"] == 0
     assert {t: len(cache.partition(t))
             for t in ("a", "b", "default")} == resident
+
+
+# -------------------------------------------------------- plan memory
+@pytest.mark.parametrize("world,seed", WORLDS)
+def test_plan_memory_fencing_invariants(request, world, seed):
+    """Plan-memory invariants over randomized seeded worlds: with
+    serving ingest ON under a random query/delta mix, the probe
+    accounting is exact (probes == queries, hits + misses == probes,
+    hits == memoized completions), memoized replays carry only scripted
+    placeholder logps, and every delta-fenced entry names a
+    delta-written table in its band — fenced entries skip the probe but
+    survive as priors. With ingest OFF, an attached-but-empty memory is
+    completion-bit-identical to no memory at all."""
+    from repro.serve.plans import PlanMemory
+
+    def case():
+        rng = np.random.default_rng(500 + seed)
+        db, agent, stream_kw = _world_under_test(request, world, seed)
+        stream = _random_stream(rng, n_queries=12, n_deltas=3,
+                                **stream_kw)
+        return db, agent, stream, int(rng.integers(1, 5))
+
+    def serve(memory):
+        db, agent, stream, n_lanes = case()
+        sched = LaneScheduler(db, Estimator(db, db.stats), agent,
+                              n_lanes=n_lanes, policy="async",
+                              plan_memory=memory)
+        return sched.run(stream), stream
+
+    def sig(comps):
+        return [(c.seq, c.admit_t, c.finish_t, tuple(c.traj.actions),
+                 c.result.failed, c.result.latency) for c in comps]
+
+    # off-switch: attached-but-empty, ingest off => bit-identical
+    plain, _ = serve(None)
+    mem_off = PlanMemory(ingest_serving=False)
+    off, _ = serve(mem_off)
+    assert sig(plain) == sig(off)
+    assert len(mem_off) == 0
+    assert mem_off.stats()["hits"] == 0
+    assert mem_off.stats()["probes"] == len(plain)
+
+    # ingest on: exact probe accounting + fence provenance
+    mem = PlanMemory()
+    comps, stream = serve(mem)
+    st = mem.stats()
+    assert st["probes"] == len(comps)
+    assert st["hits"] + st["misses"] == st["probes"]
+    assert st["hits"] == sum(c.memoized for c in comps)
+    for c in comps:
+        if c.memoized:                    # scripted replay, not policy
+            assert all(lp == 0.0 for lp in c.traj.logps)
+    written = {a.delta.table for a in stream if a.delta is not None}
+    for e in mem.entries():
+        if e.fenced and e.fence_reason == "delta":
+            assert any(t in written for t, _ in e.band)
+    # fencing a written table catches every entry banded over it, and
+    # fenced entries survive (fence != delete)
+    n_before = len(mem)
+    for tbl in sorted(written):
+        mem.fence_table(tbl, "delta")
+    assert len(mem) == n_before
+    assert all(e.fenced or not any(t in written for t, _ in e.band)
+               for e in mem.entries())

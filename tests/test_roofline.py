@@ -29,8 +29,8 @@ def test_cost_analysis_counts_scan_once_and_analyzer_fixes_it():
 
     cs = jax.jit(scanned).lower(x, w).compile()
     cu = jax.jit(unrolled).lower(x, w).compile()
-    flops_s = float(cs.cost_analysis().get("flops", 0))
-    flops_u = float(cu.cost_analysis().get("flops", 0))
+    flops_s = float(hloanalysis.cost_analysis_dict(cs).get("flops", 0))
+    flops_u = float(hloanalysis.cost_analysis_dict(cu).get("flops", 0))
     assert flops_s < flops_u / 2, "XLA cost_analysis DOES scale scans now?"
 
     hs = hloanalysis.analyze(cs.as_text())
